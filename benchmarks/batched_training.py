@@ -1,0 +1,53 @@
+"""Paper Figs. 12/16: batched single-pass training. On the chip the win is
+fewer codebook loads; on TPU it's weight-load amortization = higher
+arithmetic intensity. We measure (a) wall time per image on CPU and (b) the
+analytic weight-traffic per image (the memory-roofline term) vs batch size."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core.hdc import classifier as hdc
+from repro.nn import module as nn, resnet
+
+
+def run() -> None:
+    key = jax.random.key(0)
+    p = resnet.init(key, width_mult=0.25)
+    pbytes = nn.param_bytes(p)
+    cfg = hdc.HDCConfig(dim=2048)
+
+    @jax.jit
+    def train_batch(p, x, y):
+        feat, _ = resnet.forward(p, x)
+        return hdc.train_batched(cfg, feat, y, 10)
+
+    img = 32
+    for bs in (1, 5, 10, 25, 50):
+        x = jax.random.normal(jax.random.key(1), (bs, img, img, 3))
+        y = jnp.arange(bs) % 10
+        us = timeit(train_batch, p, x, y, warmup=1, iters=3)
+        emit(f"batched_training/bs={bs}", us / bs,
+             f"us_per_image={us/bs:.0f} weight_bytes_per_image={pbytes//bs}")
+
+    # paper's headline: batched vs non-batched per-image cost (10-way 5-shot)
+    x = jax.random.normal(jax.random.key(2), (50, img, img, 3))
+    y = jnp.repeat(jnp.arange(10), 5)
+    us_b = timeit(train_batch, p, x, y, warmup=1, iters=3) / 50
+
+    @jax.jit
+    def train_one(p, x, y, chv):
+        feat, _ = resnet.forward(p, x)
+        return hdc.train_single_pass(cfg, feat, y, 10, chv)
+
+    chv = jnp.zeros((10, cfg.dim))
+    us_nb = sum(timeit(train_one, p, x[i:i+1], y[i:i+1], chv, warmup=0, iters=1)
+                for i in range(10)) / 10
+    emit("batched_training/batched_vs_not", None,
+         f"batched={us_b:.0f}us/img nonbatched={us_nb:.0f}us/img "
+         f"saving={100*(1-us_b/us_nb):.0f}% (paper: 18-32%)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,24 @@
+"""Shared benchmark helpers: timing, CSV emit."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time (µs) of jit-compatible fn(*args)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(name: str, us: float | None, derived: str) -> None:
+    us_s = f"{us:.1f}" if us is not None else ""
+    print(f"{name},{us_s},{derived}", flush=True)

@@ -1,0 +1,31 @@
+"""Paper Table I / Eqs. 1-2-6: training op counts per 10-way 5-shot task for
+full FT / partial FT / kNN / FSL-HDnn on a ResNet-18-scale extractor."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit
+from repro.core import complexity as cx
+from repro.nn import resnet
+
+
+def run() -> None:
+    p = resnet.init(jax.random.key(0), width_mult=1.0)
+    fwd = resnet.flops_per_image(p, 224)
+    emit("complexity/resnet18_fwd", None, f"flops_per_image={fwd:.2e} (paper ~3.6e9)")
+
+    costs = cx.task_costs(fwd_flops=fwd, params=11.7e6, n_samples=50,
+                          t_itr_full=5, t_itr_partial=15,
+                          F=512, D=4096, n_classes=10)
+    speed = cx.speedup_table(costs)
+    for k, c in costs.items():
+        emit(f"complexity/{k}", None,
+             f"total_ops={c.total:.3e} fp={c.fp:.2e} gc={c.gc:.2e} "
+             f"bp={c.bp:.2e} wu={c.wu:.2e} clf={c.classifier:.2e} "
+             f"ratio_vs_fsl={speed[k]:.1f}x")
+    emit("complexity/claim", None,
+         f"full_ft/fsl_hdnn={speed['full_ft']:.1f}x (paper: ~21x fewer ops)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Paper Figs. 17/18: early-exit (E_s, E_c) sweep — average exit depth vs FSL
+accuracy, on a branch-feature pool whose depth-quality profile mimics a CNN
+(deeper taps are more separable)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import early_exit as ee
+from repro.core.hdc import classifier as hdc
+
+
+def _branch_pool(key, R=4, n_classes=10, per=25, dim=256, sep=1.8):
+    """Deeper branches are cleaner; per-class margins are heterogeneous
+    (scale jitter) so accuracy degrades gradually like real data — that is
+    what gives the (E_s, E_c) sweep its accuracy/depth trade-off."""
+    ks = jax.random.split(key, R + 2)
+    centers = jax.random.normal(ks[-1], (n_classes, dim))
+    centers = centers / jnp.linalg.norm(centers, -1, keepdims=True) * sep
+    centers = centers * jax.random.uniform(ks[-2], (n_classes, 1), minval=0.55,
+                                           maxval=1.7)
+    labels = jnp.repeat(jnp.arange(n_classes), per)
+    feats = []
+    for r in range(R):
+        strength = 0.35 + 0.65 * (r + 1) / R      # deeper = cleaner feature
+        feats.append(strength * jnp.repeat(centers, per, 0)
+                     + jax.random.normal(ks[r], (n_classes * per, dim)))
+    return feats, labels
+
+
+def run() -> None:
+    cfg = hdc.HDCConfig(dim=4096)
+    R = 4
+    k_shot, per = 5, 25                           # 10-way 5-shot, as the chip
+    feats, labels = _branch_pool(jax.random.key(0), R=R, per=per)
+    n = labels.shape[0]
+    tr_idx = jnp.concatenate([jnp.arange(c * per, c * per + k_shot)
+                              for c in range(10)])
+    te_idx = jnp.asarray([i for i in range(n) if i % per >= k_shot])
+    hvs = ee.train_branch_hvs(cfg, [f[tr_idx] for f in feats], labels[tr_idx], 10)
+    te_feats = [f[te_idx] for f in feats]
+    te_labels = labels[te_idx]
+
+    # no-EE baseline: always run all R blocks
+    p_full, _ = hdc.predict(cfg, hvs[-1], te_feats[-1])
+    acc_full = float((p_full == te_labels).mean())
+    emit("early_exit/no_ee", None, f"acc={acc_full:.3f} avg_blocks={R}")
+
+    for es, ec in [(1, 2), (1, 3), (2, 2), (2, 3), (3, 2)]:
+        preds, ex = ee.ee_predict(cfg, hvs, te_feats, ee.EEConfig(es, ec))
+        acc = float((preds == te_labels).mean())
+        depth = float(ex.mean()) + 1
+        emit(f"early_exit/Es={es},Ec={ec}", None,
+             f"acc={acc:.3f} avg_blocks={depth:.2f} "
+             f"layers_saved={100*(1-depth/R):.0f}% dacc={acc-acc_full:+.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,72 @@
+"""Paper Figs. 3(b)/15: FSL accuracy — FSL-HDnn vs kNN-L1 vs partial/full FT,
+on three synthetic pools of increasing difficulty (stand-ins for Flower102 /
+TrafficSign / CIFAR-100), plus convergence-vs-iterations (Fig. 3a).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import baselines, fsl
+from repro.core.hdc import classifier as hdc
+from repro.data import synthetic
+from repro.nn import module as nn
+
+POOLS = {          # separation plays dataset difficulty (Fig. 15 spread)
+    "flower102-like": 9.0,
+    "trafficsign-like": 7.0,
+    "cifar100-like": 5.5,
+}
+
+
+def _extract(x):
+    return x, [x]
+
+
+def run(n_episodes: int = 8) -> None:
+    spec = fsl.EpisodeSpec(n_way=10, k_shot=5, n_query=15)
+    cfg = hdc.HDCConfig(dim=4096)
+    for pool_name, sep in POOLS.items():
+        feats, labels = synthetic.synthetic_feature_pool(
+            7, n_classes=30, per_class=30, dim=512, separation=sep)
+        accs = {"fsl_hdnn": [], "knn_l1": [], "partial_ft": []}
+        for i in range(n_episodes):
+            sx, sy, qx, qy = fsl.make_episode(jax.random.key(i), feats, labels, spec)
+            learner = fsl.FSLHDnn(extract=_extract, hdc_cfg=cfg).train(sx, sy, 10)
+            accs["fsl_hdnn"].append(learner.accuracy(qx, qy))
+            knn = baselines.knn_predict(sx, sy, qx, k=1)
+            accs["knn_l1"].append(float((knn == qy).mean()))
+            ft = baselines.linear_probe_ft(jax.random.key(0), sx, sy, 10,
+                                           epochs=15, lr=0.5)
+            pred = jnp.argmax(nn.dense_apply(ft.params, qx), -1)
+            accs["partial_ft"].append(float((pred == qy).mean()))
+        for k, v in accs.items():
+            emit(f"fsl_accuracy/{pool_name}/{k}", None,
+                 f"acc={np.mean(v):.3f}±{np.std(v):.3f}")
+        gain = np.mean(accs["fsl_hdnn"]) - np.mean(accs["knn_l1"])
+        emit(f"fsl_accuracy/{pool_name}/hd_vs_knn", None, f"delta={gain:+.3f}")
+
+    # Fig. 3(a): convergence vs iterations — FSL-HDnn trains in ONE pass,
+    # partial FT needs many epochs to catch up
+    feats, labels = synthetic.synthetic_feature_pool(9, n_classes=30,
+                                                     per_class=30, dim=512,
+                                                     separation=7.0)
+    sx, sy, qx, qy = fsl.make_episode(jax.random.key(99), feats, labels, spec)
+    learner = fsl.FSLHDnn(extract=_extract, hdc_cfg=cfg).train(sx, sy, 10)
+    acc1 = learner.accuracy(qx, qy)
+    emit("fsl_convergence/fsl_hdnn_iters", None, f"iters=1 acc={acc1:.3f}")
+
+    def eval_fn(clf):
+        return float((clf(qx) == qy).mean())
+
+    ft = baselines.linear_probe_ft(jax.random.key(1), sx, sy, 10, epochs=15,
+                                   lr=0.5, eval_fn=eval_fn)
+    for it in (1, 5, 15):
+        emit(f"fsl_convergence/partial_ft@{it}", None,
+             f"iters={it} acc={ft.accs[it-1]:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Pallas kernels: µs/call in interpret mode (correctness-grade timing; the
+TPU numbers come from the roofline bytes/FLOPs which we also emit) + the
+per-kernel roofline terms at chip-paper shapes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.kernels import ops
+from repro.launch import roofline as RL
+
+
+def run() -> None:
+    # cRP encode at the chip's nominal shape F=512, D=4096
+    B, F, D = 8, 512, 4096
+    x = jax.random.normal(jax.random.key(0), (B, F))
+    us = timeit(lambda x: ops.crp_encode(x, seed=7, D=D), x, warmup=1, iters=2)
+    flops = 2 * B * F * D
+    hbm = (B * F + B * D) * 4          # base matrix: ZERO HBM bytes (generated)
+    emit("kernels/crp_encode", us,
+         f"B={B} F={F} D={D} flops={flops:.2e} hbm_bytes={hbm:.2e} "
+         f"matrix_bytes=0 (RP would read {F*D//8:.0f})")
+
+    # clustered matmul at a ResNet-18 FC-ish shape
+    M, K, N, ch_sub, bits = 8, 512, 512, 64, 4
+    xx = jax.random.normal(jax.random.key(1), (M, K))
+    idx = jax.random.randint(jax.random.key(2), (K, N), 0, 2 ** bits).astype(jnp.int8)
+    cb = jax.random.normal(jax.random.key(3), (K // ch_sub, 2 ** bits))
+    us = timeit(lambda a, b, c: ops.clustered_matmul(a, b, c, ch_sub=ch_sub),
+                xx, idx, cb, warmup=1, iters=2)
+    w_dense = K * N * 2                # bf16
+    w_clustered = K * N * bits // 8 + (K // ch_sub) * 2 ** bits * 2
+    emit("kernels/clustered_matmul", us,
+         f"M={M} K={K} N={N} weight_bytes {w_dense} -> {w_clustered} "
+         f"({w_dense/w_clustered:.2f}x HBM saving)")
+
+    # HDC distance at chip scale: 128 classes, D=4096
+    q = jax.random.normal(jax.random.key(4), (8, 4096))
+    c = jax.random.normal(jax.random.key(5), (128, 4096))
+    us = timeit(lambda q, c: ops.hdc_distance(q, c, mode="l1"), q, c,
+                warmup=1, iters=2)
+    emit("kernels/hdc_distance", us,
+         f"B=8 C=128 D=4096 bytes={(8*4096 + 128*4096 + 8*128)*4:.2e}")
+
+
+if __name__ == "__main__":
+    run()

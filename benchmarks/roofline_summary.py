@@ -1,0 +1,48 @@
+"""Roofline headline summary: reads the dry-run result dirs (if present) and
+emits the baseline-vs-optimized dominant terms + roofline fractions for every
+train cell plus the three hillclimbed pairs (EXPERIMENTS.md §Perf)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+BASE = Path("results/dryrun_16x16")
+OPT = Path("results/dryrun_16x16_opt")
+
+
+def _cells(d: Path) -> dict:
+    out = {}
+    if not d.is_dir():
+        return out
+    from repro.launch import roofline as RL
+    for f in sorted(d.glob("*.json")):
+        c = json.loads(f.read_text())
+        if "skip" in c or c.get("error"):
+            continue
+        out[(c["arch"], c["shape"], c["step"])] = RL.roofline(c)
+    return out
+
+
+def run() -> None:
+    base, opt = _cells(BASE), _cells(OPT)
+    if not base or not opt:
+        emit("roofline_summary/skipped", None,
+             "run `python -m repro.launch.dryrun --all` first")
+        return
+    for key in sorted(base):
+        if key not in opt or key[2] not in ("train", "fsl"):
+            continue
+        b, o = base[key], opt[key]
+        fb = b.get("roofline_fraction")
+        fo = o.get("roofline_fraction")
+        frac = (f"frac {fb:.3f}->{fo:.3f}" if fb is not None
+                else f"bound {b['bound_s']*1e3:.0f}ms->{o['bound_s']*1e3:.0f}ms")
+        emit(f"roofline/{key[0]}/{key[1]}/{key[2]}", None,
+             f"{b['dominant']}->{o['dominant']} {frac} "
+             f"coll {b['collective_s']:.2f}s->{o['collective_s']:.2f}s")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Benchmark aggregator: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only name]
+
+Emits ``name,us_per_call,derived`` CSV lines per benchmark. The multi-pod
+dry-run + roofline table is separate (python -m repro.launch.dryrun --all,
+python -m repro.launch.report results/dryrun_16x16).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+MODULES = [
+    "fsl_accuracy",        # paper Fig. 3(b) / Fig. 15
+    "weight_clustering",   # paper Fig. 5
+    "crp_memory",          # paper Fig. 10
+    "batched_training",    # paper Figs. 12 / 16
+    "early_exit",          # paper Figs. 17 / 18
+    "complexity",          # paper Table I / Eqs. 1-2-6
+    "kernels",             # chip modules (FE PE array, cRP encoder, distance)
+    "roofline_summary",    # §Perf headline: baseline vs optimized per train cell
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    print("benchmark,us_per_call,derived")
+    failures = []
+    for name in MODULES:
+        if args.only and name != args.only:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod.run()
+        except Exception as e:
+            failures.append(name)
+            print(f"# {name} FAILED: {e}")
+            traceback.print_exc()
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

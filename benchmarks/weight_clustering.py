@@ -1,0 +1,42 @@
+"""Paper Fig. 5: FE error / compression ratio / op-reduction vs Ch_sub
+(8..256) on a ResNet-18-like conv stack, INT8 dense as the baseline."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.clustering import layers as cl
+from repro.nn import module as nn
+
+
+def run() -> None:
+    key = jax.random.key(0)
+    # a mid-network ResNet-18 conv: 3x3, 256 -> 256 channels
+    k = nn.conv2d_init(key, 3, 256, 256)["kernel"] * 1.0
+    x = jax.random.normal(jax.random.key(1), (2, 14, 14, 256))
+    y_dense = jax.lax.conv_general_dilated(
+        x, k, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    # INT8 baseline error (the paper's reference line)
+    scale = jnp.abs(k).max() / 127.0
+    k_int8 = jnp.round(k / scale) * scale
+    y_int8 = jax.lax.conv_general_dilated(
+        x, k_int8, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    mse_int8 = float(jnp.mean((y_int8 - y_dense) ** 2))
+    emit("weight_clustering/int8_baseline", None, f"out_mse={mse_int8:.3e}")
+
+    for ch_sub in (8, 16, 32, 64, 128, 256):
+        cw = cl.cluster_weight(k, bits=4, ch_sub=ch_sub, in_axis=2)
+        y_c = cl.clustered_conv2d(cw, x)
+        mse = float(jnp.mean((y_c - y_dense) ** 2))
+        comp = cl.dense_storage_bits(k.shape, 8) / cl.storage_bits(cw)
+        ops_c, ops_d = cl.clustered_ops_per_mac_window(3, 16, ch_sub)
+        emit(f"weight_clustering/ch_sub={ch_sub}", None,
+             f"out_mse={mse:.3e} vs_int8={mse/max(mse_int8,1e-12):.2f}x "
+             f"compression={comp:.2f}x op_reduction={ops_d/ops_c:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

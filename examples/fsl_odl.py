@@ -1,0 +1,64 @@
+"""On-device learning scenario (paper Fig. 2c): a stream of N-way k-shot
+episodes arrives on the device; each is learned in a single gradient-free
+pass and immediately served. Compares FSL-HDnn against kNN-L1 and a
+15-epoch linear probe on every episode — the paper's Fig. 15 comparison.
+
+    PYTHONPATH=src python examples/fsl_odl.py [--episodes 10]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, fsl
+from repro.core.hdc import classifier as hdc
+from repro.data import EpisodicSampler, synthetic_feature_pool
+from repro.nn import module as nn
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--episodes", type=int, default=10)
+    ap.add_argument("--n-way", type=int, default=10)
+    ap.add_argument("--k-shot", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    feats, labels = synthetic_feature_pool(0, n_classes=32, per_class=40,
+                                           dim=512, separation=6.5)
+    sampler = EpisodicSampler(feats, labels, n_way=args.n_way,
+                              k_shot=args.k_shot, n_query=15, seed=1)
+    cfg = hdc.HDCConfig(dim=4096)
+
+    def extract(x):
+        return x, [x]
+
+    accs = {"fsl_hdnn": [], "knn_l1": [], "partial_ft(15ep)": []}
+    for i in range(args.episodes):
+        ep = sampler.episode(i)
+        sx, sy = jnp.asarray(ep["support_x"]), jnp.asarray(ep["support_y"])
+        qx, qy = jnp.asarray(ep["query_x"]), jnp.asarray(ep["query_y"])
+
+        learner = fsl.FSLHDnn(extract=extract, hdc_cfg=cfg)
+        learner.train(sx, sy, args.n_way, batched=True)
+        accs["fsl_hdnn"].append(learner.accuracy(qx, qy))
+
+        knn = baselines.knn_predict(sx, sy, qx, k=1)
+        accs["knn_l1"].append(float((knn == qy).mean()))
+
+        ft = baselines.linear_probe_ft(jax.random.key(i), sx, sy, args.n_way,
+                                       epochs=15, lr=0.5)
+        pred = jnp.argmax(nn.dense_apply(ft.params, qx), -1)
+        accs["partial_ft(15ep)"].append(float((pred == qy).mean()))
+        print(f"[episode {i}] " + "  ".join(
+            f"{k}={v[-1]:.3f}" for k, v in accs.items()), flush=True)
+
+    print("\n=== mean over episodes (paper Fig. 15) ===")
+    for k, v in accs.items():
+        print(f"  {k:18s} {np.mean(v):.3f} ± {np.std(v):.3f}")
+    print(f"  FSL-HDnn vs kNN: {np.mean(accs['fsl_hdnn']) - np.mean(accs['knn_l1']):+.3f} "
+          f"(paper: +4.9% avg) — with 1 pass vs 15 epochs for the probe")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Checkpointing: atomic, async, keep-last-k, reshard-on-restore."""
+from repro.checkpoint.manager import CheckpointManager, save_pytree, load_pytree

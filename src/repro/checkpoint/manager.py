@@ -1,0 +1,142 @@
+"""Checkpoint manager.
+
+Design (DESIGN.md §5, fault tolerance):
+* **atomic** — write to ``step_XXXX.tmp/`` then ``os.rename`` to ``step_XXXX/``;
+  a crash mid-save never corrupts the latest valid checkpoint.
+* **async**  — device_get happens on the caller thread (cheap, and consistent
+  with the step's donated buffers), serialization + fsync on a background
+  thread so training resumes immediately.
+* **keep-k** — old checkpoints garbage-collected after a successful save.
+* **reshard-on-restore** — arrays are saved as host numpy with their pytree
+  structure; ``restore`` takes an optional sharding pytree and uses
+  ``jax.device_put`` to lay the restored state on the *current* mesh, so a
+  512-chip checkpoint restores onto 256 chips (elastic rescale) unchanged.
+* **full state** — params, opt state, step, data-iterator state, RNG key.
+
+Format: one ``.npz`` per pytree ("flat key -> array") + ``meta.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+SEP = "$"
+
+
+def _flatten(tree: Any) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        flat[key or "_root"] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_into(template: Any, flat: dict) -> Any:
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = flat[key or "_root"]
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_pytree(tree: Any, path: Path) -> None:
+    np.savez(path, **_flatten(tree))
+
+
+def load_pytree(template: Any, path: Path) -> Any:
+    with np.load(path) as z:
+        return _unflatten_into(template, dict(z))
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, *, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        self.save_count = 0
+
+    # -- save ------------------------------------------------------------------
+    def save(self, step: int, state: dict) -> None:
+        """state: {"params": tree, "opt": tree, "extra": json-able dict}."""
+        host = {k: jax.tree.map(lambda x: np.asarray(jax.device_get(x)), v)
+                for k, v in state.items() if k != "extra"}
+        extra = state.get("extra", {})
+        self.wait()
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, extra), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host, extra)
+
+    def _write(self, step: int, host: dict, extra: dict) -> None:
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir()
+        for name, tree in host.items():
+            save_pytree(tree, tmp / f"{name}.npz")
+        (tmp / "meta.json").write_text(json.dumps(
+            {"step": step, "time": time.time(), "extra": extra,
+             "trees": sorted(host)}))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self.save_count += 1
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        return sorted(int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+                      if p.is_dir() and not p.name.endswith(".tmp"))
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int | None, templates: dict,
+                shardings: dict | None = None) -> tuple[int, dict]:
+        """templates: {"params": abstract-or-concrete tree, ...}. If
+        ``shardings`` is given (same tree structure of NamedShardings or
+        None-leaves), each restored array is device_put onto it — this is the
+        reshard-on-restore path (works across different mesh shapes)."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        meta = json.loads((d / "meta.json").read_text())
+        out = {"extra": meta.get("extra", {})}
+        for name, tpl in templates.items():
+            tree = load_pytree(tpl, d / f"{name}.npz")
+            if shardings and shardings.get(name) is not None:
+                tree = jax.tree.map(
+                    lambda arr, sh: jax.device_put(arr, sh) if sh is not None
+                    else jax.device_put(arr), tree, shardings[name])
+            else:
+                tree = jax.tree.map(jax.device_put, tree)
+            out[name] = tree
+        return meta["step"], out

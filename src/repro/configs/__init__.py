@@ -1,0 +1,67 @@
+"""Architecture registry: 10 assigned archs + the paper's own resnet18_fsl.
+
+``--arch <id>`` everywhere resolves through :func:`get_config`.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (ModelConfig, RunConfig, ShapeConfig, SHAPES,
+                                ALL_SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K,
+                                LONG_500K)
+
+ARCH_MODULES = {
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "gemma3-12b": "gemma3_12b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "hubert-xlarge": "hubert_xlarge",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "llama-3.2-vision-90b": "llama3_2_vision_90b",
+    "resnet18_fsl": "resnet18_fsl",
+}
+ASSIGNED_ARCHS = tuple(a for a in ARCH_MODULES if a != "resnet18_fsl")
+
+# archs whose every attention path is sub-quadratic (window-bounded or linear)
+SUBQUADRATIC = {"recurrentgemma-9b", "xlstm-1.3b"}
+ENCODER_ONLY = {"hubert-xlarge"}
+
+
+def _mod(arch: str):
+    if arch not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCH_MODULES)}")
+    return importlib.import_module(f"repro.configs.{ARCH_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _mod(arch).CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return _mod(arch).reduced()
+
+
+def shape_status(arch: str, shape: str) -> tuple[bool, str]:
+    """-> (runs, reason-if-skipped). Encodes the brief's skip rules."""
+    if arch in ENCODER_ONLY and shape in ("decode_32k", "long_500k"):
+        return False, "encoder-only arch has no decode step"
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return False, "full-attention arch is quadratic at 500k (needs sub-quadratic attention)"
+    return True, ""
+
+
+def cells(arch: str) -> list[str]:
+    return [s.name for s in ALL_SHAPES if shape_status(arch, s.name)[0]]
+
+
+def all_cells() -> list[tuple[str, str, bool, str]]:
+    """Every assigned (arch, shape) cell with (runs, skip_reason)."""
+    out = []
+    for a in ASSIGNED_ARCHS:
+        for s in ALL_SHAPES:
+            runs, why = shape_status(a, s.name)
+            out.append((a, s.name, runs, why))
+    return out

@@ -1,0 +1,209 @@
+"""Model / shape / run configuration dataclasses.
+
+Every assigned architecture is expressed as a :class:`ModelConfig`; the
+repeating layer pattern drives scan-over-layers grouping in
+``repro.nn.transformer``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import jax.numpy as jnp
+
+# mixer kinds understood by nn/layers.py
+MIXERS = ("attn", "local", "mla", "rglru", "mlstm", "slstm", "xattn")
+# mlp kinds
+MLPS = ("swiglu", "geglu", "gelu", "moe", "none")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense|moe|hybrid|ssm|audio|vlm|cnn
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+    # --- layer pattern -----------------------------------------------------
+    # the periodic unit of (mixer, mlp) kinds; layers [head_layers : head+unit*R)
+    # are scanned in groups of len(unit); the tail is handled by a second scan.
+    unit_mixers: Sequence[str] = ("attn",)
+    unit_mlps: Sequence[str] = ("swiglu",)
+    head_layers: int = 0              # unscanned leading layers
+    head_mixers: Sequence[str] = ()
+    head_mlps: Sequence[str] = ()
+
+    # --- attention ----------------------------------------------------------
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    local_rope_theta: float = 0.0     # 0 -> use rope_theta for local layers too
+    local_window: int = 0             # sliding window for "local" mixers
+    causal: bool = True               # False for encoder-only (hubert)
+    use_rope: bool = True
+    logit_softcap: float = 0.0
+
+    # --- MLA (deepseek) ------------------------------------------------------
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- MoE -----------------------------------------------------------------
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    dense_d_ff: int = 0               # for head (non-MoE) layers
+    capacity_factor: float = 1.25
+    moe_impl: str = "gather"          # "gather" (sort-based) | "einsum" (GShard)
+    router_aux_coef: float = 0.001
+
+    # --- recurrent (RG-LRU / xLSTM) ------------------------------------------
+    lru_width: int = 0                # 0 -> d_model
+    conv1d_width: int = 4
+    mlstm_proj_factor: float = 2.0
+    mlstm_chunk: int = 256
+
+    # --- vlm ------------------------------------------------------------------
+    n_image_tokens: int = 0
+    d_vision: int = 0
+
+    # --- audio -----------------------------------------------------------------
+    d_frontend: int = 0               # stub frame-embedding dim (hubert)
+
+    # --- misc ------------------------------------------------------------------
+    norm_eps: float = 1e-6
+    norm_kind: str = "rmsnorm"        # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    seq_shard_activations: bool = True  # Megatron-SP residual stream sharding
+    # --- §Perf optimizations (False = paper-faithful/naive baseline) ---------
+    # explicit head-sharded (or hoisted-gather) q/k/v layouts around attention
+    # so GSPMD never re-gathers K/V inside flash-attention loops (perf-1)
+    opt_attn_sharding: bool = True
+    # fused one-hot gold-logit reduction in the LM loss instead of
+    # take_along_axis over the vocab-sharded dim (avoids logits all-gather,
+    # perf-2)
+    opt_fused_loss: bool = True
+    # gather recurrent-scan inputs once before lax.scan-over-seq instead of
+    # per-step cross-shard slicing (sLSTM; perf-3)
+    opt_scan_gather: bool = True
+    # absorbed MLA decode (w_uk folded into q) — avoids re-expanding k_nope
+    # over the whole cache every decode step (perf-4)
+    mla_absorb: bool = True
+    # pure-FSDP/ZeRO-3 for train-like steps when global_batch divides the
+    # mesh: batch sharded over ALL axes, params fully sharded and gathered
+    # per layer, no tensor-parallel activations (perf-5). Dense archs only —
+    # MoE keeps EP-TP (expert weights would be gathered whole otherwise).
+    opt_dp_only_train: bool = True
+    # re-constrain scanned per-layer param slices to their sharded spec
+    # inside the scan body; stops GSPMD from materializing a full unsharded
+    # param copy per device before the loop (perf-6)
+    opt_scan_param_constraint: bool = True
+    # extend perf-5 pure-FSDP to MoE archs whose per-layer expert weights are
+    # small enough to gather whole (perf-7; granite: 189 MB/layer — yes;
+    # deepseek: 2.8 GB/layer — no)
+    opt_moe_dp_only: bool = False
+
+    # --- FSL-HDnn head (the paper's technique) ----------------------------------
+    hdc_dim: int = 4096
+    hdc_seed: int = 1234
+    hdc_block: int = 16               # cyclic block edge (16x16 per the chip)
+    hdc_hv_dtype: str = "int16"       # class-HV accumulator precision (INT1-16 chip range)
+    # weight clustering of the frozen feature extractor
+    cluster_bits: int = 4             # log2(N) index bits
+    cluster_ch_sub: int = 64          # input channels sharing one codebook
+    # early exit taps: one branch per scan unit-repeat by default
+    early_exit: bool = True
+    ee_start: int = 2                 # E_s
+    ee_consecutive: int = 2           # E_c
+
+    # -------------------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 256 so the vocab dim is shardable
+        (e.g. granite's 49155 = 3·5·29·113 has no power-of-2 factor). Logits in
+        the padded region are masked to -inf in the loss; labels never reach
+        them. Standard practice (MaxText pads to 128/256)."""
+        if self.vocab_size == 0:
+            return 0
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def unit_len(self) -> int:
+        return len(self.unit_mixers)
+
+    @property
+    def n_repeats(self) -> int:
+        return (self.n_layers - self.head_layers) // self.unit_len
+
+    @property
+    def tail_layers(self) -> int:
+        return self.n_layers - self.head_layers - self.n_repeats * self.unit_len
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def layout(self):
+        """-> (head(kinds), unit(kinds), repeats, tail(kinds)). kinds = (mixer, mlp)."""
+        head = list(zip(self.head_mixers, self.head_mlps))
+        unit = list(zip(self.unit_mixers, self.unit_mlps))
+        tail_n = self.tail_layers
+        tail = unit[:tail_n]  # tail reuses the unit prefix pattern
+        return head, unit, self.n_repeats, tail
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                         # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES = {s.name: s for s in ALL_SHAPES}
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """Training-run hyperparameters (launcher-level)."""
+    steps: int = 200
+    learning_rate: float = 3e-4
+    warmup_steps: int = 20
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.95
+    seed: int = 0
+    microbatches: int = 1             # grad accumulation / PP microbatching
+    checkpoint_every: int = 50
+    keep_checkpoints: int = 3
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    async_checkpoint: bool = True
+    grad_compression: str = "none"    # none | int8_ef
+    log_every: int = 10

@@ -1,0 +1,18 @@
+"""codeqwen1.5-7b [dense] — 32L d_model=4096 32H (kv=32, i.e. MHA) d_ff=13440
+vocab=92416, qwen1.5 arch (QKV bias). [hf:Qwen/CodeQwen1.5-7B; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32,
+    d_ff=13_440, vocab_size=92_416,
+    unit_mixers=("attn",), unit_mlps=("swiglu",),
+    qkv_bias=True, rope_theta=1_000_000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, vocab_size=512,
+        d_ff=128, param_dtype="float32", compute_dtype="float32", remat=False)

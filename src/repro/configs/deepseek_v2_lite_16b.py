@@ -1,0 +1,27 @@
+"""deepseek-v2-lite-16b [moe] — 27L d_model=2048 16H d_ff(expert)=1408
+vocab=102400, MLA kv_lora=512, 64 routed experts top-6 + 2 shared, first layer
+dense (d_ff 10944). [arXiv:2405.04434; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b", family="moe",
+    n_layers=27, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab_size=102_400,
+    # MLA
+    kv_lora_rank=512, qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128,
+    # MoE: 64 routed top-6 + 2 shared (the "160 routed" note applies to full
+    # V2, not Lite — we follow the leading spec line)
+    n_experts=64, n_shared_experts=2, top_k=6, moe_d_ff=1408, dense_d_ff=10_944,
+    head_layers=1, head_mixers=("mla",), head_mlps=("swiglu",),
+    unit_mixers=("mla",), unit_mlps=("moe",),
+    rope_theta=10_000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, vocab_size=512,
+        kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16,
+        n_experts=8, n_shared_experts=1, top_k=2, moe_d_ff=32, dense_d_ff=96,
+        d_ff=32, param_dtype="float32", compute_dtype="float32", remat=False)

@@ -1,0 +1,25 @@
+"""gemma3-12b [dense] — 48L d_model=3840 16H (GQA kv=8) d_ff=15360
+vocab=262144, 5:1 local:global sliding-window attention (window 1024),
+128k context. [hf:google/gemma-3-*; unverified]
+
+long_500k is SKIPPED for this arch: the global layers are full quadratic
+attention (see DESIGN.md §Arch-applicability).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-12b", family="dense",
+    n_layers=48, d_model=3840, n_heads=16, n_kv_heads=8, head_dim=256,
+    d_ff=15_360, vocab_size=262_144,
+    unit_mixers=("local", "local", "local", "local", "local", "attn"),
+    unit_mlps=("geglu",) * 6,
+    local_window=1024, rope_theta=1_000_000.0, local_rope_theta=10_000.0,
+    tie_embeddings=True,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=6, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        vocab_size=512, d_ff=128, local_window=8,
+        param_dtype="float32", compute_dtype="float32", remat=False)

@@ -1,0 +1,20 @@
+"""granite-moe-3b-a800m [moe] — 32L d_model=1536 24H (GQA kv=8) expert d_ff=512
+vocab=49155, MoE 40 experts top-8. [hf:ibm-granite/granite-3.0-*-base; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m", family="moe",
+    n_layers=32, d_model=1536, n_heads=24, n_kv_heads=8,
+    d_ff=512, vocab_size=49_155,
+    n_experts=40, top_k=8, moe_d_ff=512,
+    unit_mixers=("attn",), unit_mlps=("moe",),
+    rope_theta=10_000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, vocab_size=512,
+        n_experts=8, top_k=2, moe_d_ff=32, d_ff=32,
+        param_dtype="float32", compute_dtype="float32", remat=False)

@@ -1,0 +1,26 @@
+"""hubert-xlarge [audio] — 48L d_model=1280 16H (MHA) d_ff=5120 vocab=504,
+encoder-only transformer (same backbone as wav2vec2). The CNN waveform
+frontend is a STUB per the brief: input_specs() provides precomputed
+(B, S, 512) frame embeddings; ``in_proj`` maps 512 -> 1280.
+[arXiv:2106.07447; unverified]
+
+Encoder-only => decode_32k / long_500k SKIPPED (no decode step). Positional
+information is the frontend's job in HuBERT (conv pos-emb, stubbed); the
+backbone here applies RoPE as a stand-in — noted as a stub deviation.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge", family="audio",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16,
+    d_ff=5120, vocab_size=504,
+    unit_mixers=("attn",), unit_mlps=("gelu",),
+    causal=False, norm_kind="layernorm", d_frontend=512,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, vocab_size=32,
+        d_ff=128, d_frontend=24,
+        param_dtype="float32", compute_dtype="float32", remat=False)

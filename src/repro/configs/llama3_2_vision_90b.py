@@ -1,0 +1,26 @@
+"""llama-3.2-vision-90b [vlm] — 100L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256, gated cross-attention image layers every 5th layer (20 of 100).
+The vision tower is a STUB per the brief: input_specs() provides precomputed
+(B, 1600, 1280) patch embeddings; ``vision_proj`` maps 1280 -> 8192.
+[hf:meta-llama/Llama-3.2-11B-Vision scaled per assignment; unverified]
+
+Full quadratic self-attention => long_500k SKIPPED.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b", family="vlm",
+    n_layers=100, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=28_672, vocab_size=128_256,
+    unit_mixers=("attn", "attn", "attn", "xattn", "attn"),
+    unit_mlps=("swiglu",) * 5,
+    rope_theta=500_000.0,
+    n_image_tokens=1600, d_vision=1280,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=5, d_model=64, n_heads=4, n_kv_heads=2, vocab_size=512,
+        d_ff=128, n_image_tokens=16, d_vision=24,
+        param_dtype="float32", compute_dtype="float32", remat=False)

@@ -1,0 +1,18 @@
+"""phi4-mini-3.8b [dense] — 32L d_model=3072 24H (GQA kv=8) d_ff=8192
+vocab=200064, RoPE SwiGLU GQA. [arXiv:2412.08905; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi4-mini-3.8b", family="dense",
+    n_layers=32, d_model=3072, n_heads=24, n_kv_heads=8,
+    d_ff=8192, vocab_size=200_064,
+    unit_mixers=("attn",), unit_mlps=("swiglu",),
+    rope_theta=10_000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, vocab_size=512,
+        d_ff=128, param_dtype="float32", compute_dtype="float32", remat=False)

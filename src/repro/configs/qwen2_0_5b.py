@@ -1,0 +1,18 @@
+"""qwen2-0.5b [dense] — 24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151936,
+GQA with QKV bias, tied embeddings. [arXiv:2407.10671; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b", family="dense",
+    n_layers=24, d_model=896, n_heads=14, n_kv_heads=2,
+    d_ff=4864, vocab_size=151_936,
+    unit_mixers=("attn",), unit_mlps=("swiglu",),
+    qkv_bias=True, rope_theta=1_000_000.0, tie_embeddings=True,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, vocab_size=512,
+        d_ff=128, param_dtype="float32", compute_dtype="float32", remat=False)

@@ -1,0 +1,23 @@
+"""recurrentgemma-9b [hybrid] — 38L d_model=4096 16H (MQA kv=1) d_ff=12288
+vocab=256000, RG-LRU + local attention 1:2 (unit = rglru, rglru, local;
+12 repeats + 2 tail rglru), window 2048. [arXiv:2402.19427; unverified]
+
+Sub-quadratic (local attention + linear recurrence) => long_500k RUNS.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b", family="hybrid",
+    n_layers=38, d_model=4096, n_heads=16, n_kv_heads=1, head_dim=256,
+    d_ff=12_288, vocab_size=256_000,
+    unit_mixers=("rglru", "rglru", "local"), unit_mlps=("geglu",) * 3,
+    local_window=2048, lru_width=4096, conv1d_width=4,
+    rope_theta=10_000.0, tie_embeddings=True,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=5, d_model=64, n_heads=4, n_kv_heads=1, head_dim=16,
+        vocab_size=512, d_ff=128, local_window=8, lru_width=64,
+        param_dtype="float32", compute_dtype="float32", remat=False)

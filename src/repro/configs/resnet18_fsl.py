@@ -1,0 +1,24 @@
+"""resnet18_fsl [cnn] — the paper's own configuration (§VI-B): ResNet-18
+feature extractor (ImageNet-pretrained in the paper; synthetically pretrained
+here), F=512 features quantized to 4-b, HDC D=4096, weight clustering with
+Ch_sub=64 / 4-bit indices, early exit over the 4 CONV blocks (E_s=2, E_c=2),
+10-way 5-shot default task.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="resnet18_fsl", family="cnn",
+    n_layers=16, d_model=512, n_heads=1, n_kv_heads=1, d_ff=0, vocab_size=0,
+    unit_mixers=(), unit_mlps=(),
+    hdc_dim=4096, cluster_bits=4, cluster_ch_sub=64,
+    early_exit=True, ee_start=2, ee_consecutive=2,
+    param_dtype="float32", compute_dtype="float32",
+)
+
+IMG_RES = 224          # paper resizes all inputs to 224x224
+FEATURE_DIM = 512      # F
+N_WAY, K_SHOT = 10, 5  # headline task: 10-way 5-shot
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(hdc_dim=512, cluster_ch_sub=16)

@@ -1,0 +1,23 @@
+"""xlstm-1.3b [ssm] — 48L d_model=2048 4H d_ff=0 vocab=50304, sLSTM + mLSTM
+blocks (7:1 mLSTM:sLSTM per unit of 8). Blocks carry their own up/down
+projections (hence d_ff=0 / mlp "none"). [arXiv:2405.04517; unverified]
+
+Linear-time recurrence => long_500k RUNS. Note: baseline training/prefill uses
+the stabilized quadratic parallel form; the chunkwise-parallel form is a §Perf
+optimization (see EXPERIMENTS.md).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab_size=50_304,
+    unit_mixers=("mlstm",) * 7 + ("slstm",), unit_mlps=("none",) * 8,
+    mlstm_proj_factor=2.0, use_rope=False,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=8, d_model=64, n_heads=4, n_kv_heads=4, vocab_size=512,
+        param_dtype="float32", compute_dtype="float32", remat=False)

@@ -1,0 +1,2 @@
+"""FSL-HDnn core: the paper's contribution (HDC FSL, weight clustering,
+early exit, batched single-pass training, complexity model)."""

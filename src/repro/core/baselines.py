@@ -1,0 +1,101 @@
+"""Baselines the paper compares against (§II-A, Figs. 3/15): kNN-L1, full
+fine-tuning, partial fine-tuning (linear probe = final-layer FT).
+
+These run on features from the same frozen extractor so the comparison
+isolates the classifier/training scheme, exactly like the paper's Fig. 15.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import module as nn
+
+
+# ---------------------------------------------------------------------------
+# kNN-L1 (paper's [18] SAPIENS-style associative baseline)
+# ---------------------------------------------------------------------------
+
+def knn_predict(support_x: jnp.ndarray, support_y: jnp.ndarray,
+                query_x: jnp.ndarray, k: int = 1) -> jnp.ndarray:
+    d = jnp.sum(jnp.abs(query_x[:, None].astype(jnp.float32)
+                        - support_x[None].astype(jnp.float32)), axis=-1)
+    if k == 1:
+        return support_y[jnp.argmin(d, axis=-1)]
+    _, idx = jax.lax.top_k(-d, k)
+    votes = support_y[idx]                                  # (Q, k)
+    n_classes = int(jnp.max(support_y)) + 1
+    oh = jax.nn.one_hot(votes, n_classes).sum(1)
+    return jnp.argmax(oh, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# gradient-based FT heads (linear head, optionally + backbone grads)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FTResult:
+    params: dict
+    losses: list
+    accs: list
+
+
+def _xent(logits, y):
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def linear_probe_ft(key, feats, labels, n_classes: int, *, epochs: int = 15,
+                    lr: float = 0.1, eval_fn=None) -> FTResult:
+    """Partial FT: train only the classifier head on frozen features (§II-A-2)."""
+    w = nn.dense_init(key, feats.shape[-1], n_classes, jnp.float32, bias=True)
+
+    @jax.jit
+    def step(w, x, y):
+        def loss(w):
+            return _xent(nn.dense_apply(w, x), y)
+        l, g = jax.value_and_grad(loss)(w)
+        w = jax.tree.map(lambda p, gg: p - lr * gg, w, g)
+        return w, l
+
+    losses, accs = [], []
+    for _ in range(epochs):
+        w, l = step(w, feats, labels)
+        losses.append(float(l))
+        if eval_fn is not None:
+            accs.append(eval_fn(lambda x: jnp.argmax(nn.dense_apply(w, x), -1)))
+    return FTResult(w, losses, accs)
+
+
+def full_ft(key, extract_params, extract_apply, images, labels, n_classes: int, *,
+            epochs: int = 5, lr: float = 3e-3, eval_fn=None) -> FTResult:
+    """Full FT: backbone + head trained with SGD (§II-A-1). CPU-scale models only."""
+    feat_dim = extract_apply(extract_params, images[:1])[0].shape[-1]
+    head = nn.dense_init(key, feat_dim, n_classes, jnp.float32, bias=True)
+    params = {"backbone": extract_params, "head": head}
+
+    @jax.jit
+    def step(params, x, y):
+        def loss(params):
+            f, _ = extract_apply(params["backbone"], x)
+            return _xent(nn.dense_apply(params["head"], f), y)
+        l, g = jax.value_and_grad(loss)(params)
+        params = jax.tree.map(
+            lambda p, gg: p - lr * gg if jnp.issubdtype(p.dtype, jnp.floating) else p,
+            params, g)
+        return params, l
+
+    losses, accs = [], []
+    for _ in range(epochs):
+        params, l = step(params, images, labels)
+        losses.append(float(l))
+        if eval_fn is not None:
+            def clf(x, params=params):
+                f, _ = extract_apply(params["backbone"], x)
+                return jnp.argmax(nn.dense_apply(params["head"], f), -1)
+            accs.append(eval_fn(clf))
+    return FTResult(params, losses, accs)

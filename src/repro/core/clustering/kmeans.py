@@ -1,0 +1,36 @@
+"""1-D K-means weight clustering (paper §III-A, Fig. 4a).
+
+Weights within a group of ``ch_sub`` input channels are clustered into
+``N = 2**bits`` centroids; each weight is replaced by a ``bits``-bit index into
+a per-group BF16 codebook. Lloyd iterations with quantile init, vmapped over
+groups — pure JAX, jit-friendly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kmeans_1d(values: jnp.ndarray, n_clusters: int, n_iter: int = 25):
+    """values: (M,) -> (codebook (N,), indices (M,) int32)."""
+    q = jnp.linspace(0.0, 1.0, n_clusters)
+    cent = jnp.quantile(values, q)
+
+    def step(cent, _):
+        d = jnp.abs(values[:, None] - cent[None, :])
+        idx = jnp.argmin(d, axis=1)
+        oh = jax.nn.one_hot(idx, n_clusters, dtype=values.dtype)
+        cnt = oh.sum(0)
+        s = oh.T @ values
+        new = jnp.where(cnt > 0, s / jnp.maximum(cnt, 1), cent)
+        return new, None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=n_iter)
+    idx = jnp.argmin(jnp.abs(values[:, None] - cent[None, :]), axis=1)
+    return cent, idx.astype(jnp.int32)
+
+
+def cluster_groups(w_groups: jnp.ndarray, bits: int, n_iter: int = 25):
+    """w_groups: (G, M) -> (codebooks (G, N), indices (G, M) int32)."""
+    f = jax.vmap(lambda v: kmeans_1d(v, 2 ** bits, n_iter))
+    return f(w_groups.astype(jnp.float32))

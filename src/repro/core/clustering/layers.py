@@ -1,0 +1,121 @@
+"""Clustered-weight layers (paper §III-A, Fig. 4b) — TPU adaptation.
+
+Storage model: per layer, ``bits``-bit indices (one per weight) + a small BF16
+codebook per ``ch_sub`` input-channel group. Two apply paths:
+
+* ``decompress`` (TPU-native, default): gather ``codebook[idx]`` to rebuild the
+  dense weight tile, then use the MXU (conv/matmul). The ASIC's win was fewer
+  MACs; on TPU the MXU is not MAC-limited, so the win moves to HBM bytes —
+  indices are 2-8x smaller than bf16 weights. The Pallas kernel
+  (``repro.kernels.clustered_matmul``) fuses the gather into the matmul tile
+  loop so the dense weight never round-trips HBM.
+* ``accumulate`` (paper-faithful op-count reference): accumulate activations
+  per index, then one multiply per centroid — exactly Fig. 4(b)'s
+  ``K^2 + N - 1`` op schedule. Used by the complexity model and tests.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clustering.kmeans import cluster_groups
+
+Params = Any
+
+
+def cluster_weight(w: jnp.ndarray, *, bits: int, ch_sub: int, in_axis: int,
+                   n_iter: int = 25) -> Params:
+    """Cluster any weight tensor along groups of ``ch_sub`` on ``in_axis``.
+
+    Returns {"idx": int8/int32 (G, M), "codebook": (G, N), "shape", "in_axis",
+    "ch_sub"} where M = elements per group.
+    """
+    w = jnp.moveaxis(w, in_axis, 0)
+    cin = w.shape[0]
+    g = max(1, -(-cin // ch_sub))  # ceil
+    pad = g * ch_sub - cin
+    wp = jnp.pad(w.reshape(cin, -1), ((0, pad), (0, 0)))
+    grouped = wp.reshape(g, ch_sub * wp.shape[-1])
+    codebook, idx = cluster_groups(grouped, bits, n_iter)
+    return {
+        "idx": idx.astype(jnp.int8 if bits <= 7 else jnp.int32),
+        "codebook": codebook.astype(jnp.bfloat16),
+        "meta": {
+            "shape": tuple(np.asarray(w.shape)), "in_axis": int(in_axis),
+            "ch_sub": int(ch_sub), "cin": int(cin), "bits": int(bits),
+        },
+    }
+
+
+def reconstruct(cw: Params, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Decompress a clustered weight back to dense (moveaxis-restored)."""
+    meta = cw["meta"]
+    g, N = cw["codebook"].shape
+    vals = jnp.take_along_axis(cw["codebook"].astype(dtype),
+                               cw["idx"].astype(jnp.int32), axis=1)  # (G, M)
+    cin = meta["cin"]
+    rest = int(np.prod(meta["shape"][1:]))
+    w = vals.reshape(g * meta["ch_sub"], rest)[:cin].reshape(meta["shape"])
+    return jnp.moveaxis(w, 0, meta["in_axis"])
+
+
+def clustered_error(w: jnp.ndarray, cw: Params) -> jnp.ndarray:
+    """MSE between dense and clustered weight (paper Fig. 5 'FE output error' proxy)."""
+    return jnp.mean((w.astype(jnp.float32) - reconstruct(cw, jnp.float32)) ** 2)
+
+
+def storage_bits(cw: Params) -> int:
+    meta = cw["meta"]
+    n_idx = int(np.prod(cw["idx"].shape))
+    g, N = cw["codebook"].shape
+    return n_idx * meta["bits"] + g * N * 16
+
+
+def dense_storage_bits(shape, bits_per_weight: int = 8) -> int:
+    return int(np.prod(shape)) * bits_per_weight
+
+
+def clustered_ops_per_mac_window(k: int, n_centroids: int, ch_sub: int) -> tuple[int, int]:
+    """(clustered_ops, dense_ops) per output pixel per ch_sub group — Fig. 4(b):
+    dense 2*K^2*ch_sub - 1  ->  clustered K^2*ch_sub + N - 1."""
+    dense = 2 * k * k * ch_sub - 1
+    clustered = k * k * ch_sub + n_centroids - 1
+    return clustered, dense
+
+
+# --- apply paths ------------------------------------------------------------
+
+def clustered_conv2d(cw: Params, x: jnp.ndarray, *, stride: int = 1,
+                     padding: str = "SAME") -> jnp.ndarray:
+    """Decompress-then-MXU conv. cw clusters a (K,K,Cin,Cout) kernel on axis 2."""
+    w = reconstruct(cw, x.dtype)
+    return jax.lax.conv_general_dilated(x, w, (stride, stride), padding,
+                                        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def clustered_dense(cw: Params, x: jnp.ndarray) -> jnp.ndarray:
+    w = reconstruct(cw, x.dtype)
+    return x @ w
+
+
+def clustered_dense_accumulate(cw: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Paper-faithful partial-sum-reuse path (op-count reference, matmul only).
+
+    y[o] = sum_n codebook[g(o?),n] * (sum_{i in group g, idx[i,o]=n} x[i])
+    Implemented per input-channel group with a one-hot segment sum over
+    centroid ids — numerically identical to decompress (same codebook values).
+    """
+    meta = cw["meta"]
+    cin, ch_sub = meta["cin"], meta["ch_sub"]
+    g, N = cw["codebook"].shape
+    d_out = int(np.prod(meta["shape"][1:]))
+    idx = cw["idx"].astype(jnp.int32).reshape(g, ch_sub, d_out)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, g * ch_sub - cin)))
+    xg = xp.reshape(x.shape[0], g, ch_sub)
+    oh = jax.nn.one_hot(idx, N, dtype=jnp.float32)          # (g, ch_sub, d_out, N)
+    acc = jnp.einsum("bgc,gcon->bgon", xg, oh)              # accumulate by index
+    y = jnp.einsum("bgon,gn->bo", acc, cw["codebook"].astype(jnp.float32))
+    return y.astype(x.dtype)

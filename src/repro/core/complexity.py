@@ -1,0 +1,69 @@
+"""Training-cost model — paper Eqs. (1), (2), (6) and Table I's 21x ops claim.
+
+Costs are op counts (MAC=2 ops) per N-way k-shot task:
+  full FT     : T_itr * N * (FP + GC + BP + WU)      (Eq. 1)
+  partial FT  : T_itr * N * (FP + partial grads)     (Eq. 2)
+  kNN         : N * FP (+ distance search)
+  FSL-HDnn    : N * (FP_clustered + HDC)             (Eq. 6)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class CostBreakdown:
+    fp: float
+    gc: float = 0.0
+    bp: float = 0.0
+    wu: float = 0.0
+    classifier: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return self.fp + self.gc + self.bp + self.wu + self.classifier
+
+
+def hdc_train_ops(F: int, D: int, n_samples: int, *, batched_classes: int = 0) -> float:
+    """Encode (F*D adds via binary projection) + aggregate (D adds) per sample.
+    With §V-B batching, encoding happens once per class instead of per sample."""
+    encodes = batched_classes if batched_classes else n_samples
+    return encodes * (F * D) + n_samples * D
+
+
+def hdc_infer_ops(F: int, D: int, n_classes: int) -> float:
+    return F * D + n_classes * D * 2  # encode + |q-C| distance accumulate
+
+
+def task_costs(*, fwd_flops: float, params: float, n_samples: int,
+               t_itr_full: int = 5, t_itr_partial: int = 15,
+               partial_fraction: float = 0.05, F: int = 512, D: int = 4096,
+               n_classes: int = 10, clustered_speedup: float = 2.1,
+               batched: bool = True) -> dict[str, CostBreakdown]:
+    """Op counts for one N-way k-shot task (N*k = n_samples), per §II-A/§III-B."""
+    full = CostBreakdown(
+        fp=t_itr_full * n_samples * fwd_flops,
+        gc=t_itr_full * n_samples * fwd_flops,       # dL/dW ≈ one more FP-equivalent
+        bp=t_itr_full * n_samples * fwd_flops,       # dL/dx ≈ one more FP-equivalent
+        wu=t_itr_full * n_samples * 2 * params,
+    )
+    partial = CostBreakdown(
+        fp=t_itr_partial * n_samples * fwd_flops,
+        gc=t_itr_partial * n_samples * fwd_flops * partial_fraction,
+        bp=t_itr_partial * n_samples * fwd_flops * partial_fraction,
+        wu=t_itr_partial * n_samples * 2 * params * partial_fraction,
+    )
+    knn = CostBreakdown(fp=n_samples * fwd_flops,
+                        classifier=n_samples * F * 2)
+    fsl_hdnn = CostBreakdown(
+        fp=n_samples * fwd_flops / clustered_speedup,
+        classifier=hdc_train_ops(F, D, n_samples,
+                                 batched_classes=n_classes if batched else 0),
+    )
+    return {"full_ft": full, "partial_ft": partial, "knn": knn,
+            "fsl_hdnn": fsl_hdnn}
+
+
+def speedup_table(costs: dict[str, CostBreakdown]) -> dict[str, float]:
+    base = costs["fsl_hdnn"].total
+    return {k: v.total / base for k, v in costs.items()}

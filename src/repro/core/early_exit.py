@@ -1,0 +1,109 @@
+"""Early exit with branch feature extraction (paper §V-A, Figs. 11/17/18).
+
+Training: every branch feature (avg-pooled CONV-block / layer-group output) is
+HDC-encoded in the same single pass; per-branch class HVs are stored.
+
+Inference: exit at the first branch e >= E_s-1 (0-based) where the prediction
+agreed across the last E_c branches. Two execution styles:
+
+* ``ee_predict``     — all branches computed, exit point selected afterwards
+  (vectorized; used for accuracy/exit-depth studies, paper Fig. 17);
+* ``serve_while``    — ``lax.while_loop`` over layer groups so later groups are
+  genuinely *not executed* after exit (the chip's sequencer analogue; real
+  compute savings under jit).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hdc import classifier as hdc
+
+
+@dataclass(frozen=True)
+class EEConfig:
+    e_start: int = 2          # E_s (1-based, as in the paper)
+    e_consecutive: int = 2    # E_c
+
+
+def train_branch_hvs(cfg: hdc.HDCConfig, branch_feats: list[jnp.ndarray],
+                     labels: jnp.ndarray, n_classes: int,
+                     prev: list[jnp.ndarray] | None = None) -> list[jnp.ndarray]:
+    """Single-pass training of one class-HV bank per branch."""
+    out = []
+    for b, f in enumerate(branch_feats):
+        p = prev[b] if prev is not None else None
+        out.append(hdc.train_single_pass(cfg, f, labels, n_classes, p))
+    return out
+
+
+def branch_predictions(cfg: hdc.HDCConfig, branch_hvs: list[jnp.ndarray],
+                       branch_feats: list[jnp.ndarray]) -> jnp.ndarray:
+    """-> (R, B) per-branch predictions."""
+    return jnp.stack([hdc.predict(cfg, hv, f)[0]
+                      for hv, f in zip(branch_hvs, branch_feats)])
+
+
+def exit_points(preds: jnp.ndarray, ee: EEConfig) -> jnp.ndarray:
+    """preds: (R, B) -> (B,) 0-based exit branch (R-1 when never confident).
+
+    Exit at branch e if e+1 >= E_s + E_c - 1 is not required by the paper; the
+    rule is: predictions consistent across E_c consecutive blocks, starting the
+    check at block E_s. We exit at the earliest e >= E_s-1 such that
+    preds[e-E_c+1 .. e] are all equal (needs e-E_c+1 >= 0).
+    """
+    R, B = preds.shape
+    ec, es = ee.e_consecutive, ee.e_start
+    ok = jnp.ones((R, B), bool)
+    for back in range(1, ec):
+        shifted = jnp.roll(preds, back, axis=0)
+        ok &= (shifted == preds) & (jnp.arange(R)[:, None] >= back)
+    ok &= (jnp.arange(R)[:, None] >= (es - 1))
+    first = jnp.argmax(ok, axis=0)
+    any_ok = jnp.any(ok, axis=0)
+    return jnp.where(any_ok, first, R - 1)
+
+
+def ee_predict(cfg: hdc.HDCConfig, branch_hvs: list[jnp.ndarray],
+               branch_feats: list[jnp.ndarray], ee: EEConfig):
+    """-> (preds (B,), exit_idx (B,)). Vectorized study path."""
+    preds = branch_predictions(cfg, branch_hvs, branch_feats)
+    ex = exit_points(preds, ee)
+    final = jnp.take_along_axis(preds, ex[None, :], axis=0)[0]
+    return final, ex
+
+
+def serve_while(apply_group, n_groups: int, x0, cfg: hdc.HDCConfig,
+                branch_hvs: jnp.ndarray, ee: EEConfig):
+    """Early-exit serving: run layer groups until the EE rule fires.
+
+    ``apply_group(i, x) -> (x, branch_feat (B,F))``; ``branch_hvs``: (R, C, D).
+    Works for batch=1 semantics (the chip's mode); for B>1 exits when *all*
+    lanes are confident. -> (pred (B,), n_groups_run, x)
+    """
+    B = x0.shape[0]
+    R = n_groups
+    ec, es = ee.e_consecutive, ee.e_start
+    C = branch_hvs.shape[1]
+
+    # carry: (i, x, last_preds (ec, B), done, pred)
+    init = (jnp.asarray(0), x0, jnp.full((ec, B), -1), jnp.asarray(False),
+            jnp.full((B,), -1))
+
+    def cond(c):
+        i, _, _, done, _ = c
+        return (~done) & (i < R)
+
+    def body(c):
+        i, x, last, _, _ = c
+        x, feat = apply_group(i, x)
+        pr, _ = hdc.predict(cfg, branch_hvs[i], feat)
+        last = jnp.concatenate([last[1:], pr[None]], axis=0)
+        consistent = jnp.all(last == last[-1:], axis=0) & jnp.all(last >= 0, axis=0)
+        fire = jnp.all(consistent) & (i >= es - 1)
+        return (i + 1, x, last, fire, pr)
+
+    i, x, last, done, pred = jax.lax.while_loop(cond, body, init)
+    return pred, i, x

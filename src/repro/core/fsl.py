@@ -1,0 +1,82 @@
+"""End-to-end FSL-HDnn pipeline (paper Fig. 2c): frozen feature extractor ->
+cRP encoding -> single-pass HDC training -> distance inference, plus N-way
+k-shot episode construction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hdc import classifier as hdc
+from repro.core import early_exit as ee_mod
+
+
+@dataclass(frozen=True)
+class EpisodeSpec:
+    n_way: int = 10
+    k_shot: int = 5
+    n_query: int = 15
+
+
+def make_episode(key, feats: jnp.ndarray, labels: jnp.ndarray, spec: EpisodeSpec):
+    """Sample an N-way k-shot episode from a pool of (feats, labels).
+
+    Returns (support_x, support_y, query_x, query_y) with episode-local labels
+    0..N-1. Host-side (numpy-style) sampling; pools are small in FSL.
+    """
+    import numpy as np
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    labels_np = np.asarray(labels)
+    classes = rng.choice(np.unique(labels_np), size=spec.n_way, replace=False)
+    sx, sy, qx, qy = [], [], [], []
+    for new_c, c in enumerate(classes):
+        idx = np.where(labels_np == c)[0]
+        pick = rng.choice(idx, size=spec.k_shot + spec.n_query, replace=False)
+        sx.append(np.asarray(feats)[pick[:spec.k_shot]])
+        sy.extend([new_c] * spec.k_shot)
+        qx.append(np.asarray(feats)[pick[spec.k_shot:]])
+        qy.extend([new_c] * spec.n_query)
+    return (jnp.concatenate([jnp.asarray(a) for a in sx]), jnp.asarray(sy),
+            jnp.concatenate([jnp.asarray(a) for a in qx]), jnp.asarray(qy))
+
+
+@dataclass
+class FSLHDnn:
+    """The paper's learner: frozen ``extract`` + HDC classifier (+ optional EE)."""
+    extract: Callable[[jnp.ndarray], tuple[jnp.ndarray, list[jnp.ndarray]]]
+    hdc_cfg: hdc.HDCConfig = field(default_factory=hdc.HDCConfig)
+    ee_cfg: ee_mod.EEConfig | None = None
+    class_hvs: jnp.ndarray | None = None
+    branch_hvs: list[jnp.ndarray] | None = None
+
+    def train(self, x, y, n_classes: int, *, batched: bool = True):
+        """Single-pass, gradient-free (Eq. 4). ``batched`` = paper §V-B."""
+        feat, branches = self.extract(x)
+        trainer = hdc.train_batched if batched else hdc.train_single_pass
+        self.class_hvs = trainer(self.hdc_cfg, feat, y, n_classes, self.class_hvs)
+        if self.ee_cfg is not None:
+            self.branch_hvs = ee_mod.train_branch_hvs(
+                self.hdc_cfg, branches, y, n_classes, self.branch_hvs)
+        return self
+
+    def predict(self, x, *, early_exit: bool = False):
+        feat, branches = self.extract(x)
+        if early_exit and self.ee_cfg is not None:
+            return ee_mod.ee_predict(self.hdc_cfg, self.branch_hvs, branches, self.ee_cfg)
+        preds, _ = hdc.predict(self.hdc_cfg, self.class_hvs, feat)
+        return preds, None
+
+    def accuracy(self, x, y, **kw) -> float:
+        preds, _ = self.predict(x, **kw)
+        return float(jnp.mean(preds == y))
+
+
+def run_episode(key, extract, feats_pool, labels_pool, spec: EpisodeSpec,
+                hdc_cfg: hdc.HDCConfig, *, batched: bool = True) -> float:
+    sx, sy, qx, qy = make_episode(key, feats_pool, labels_pool, spec)
+    learner = FSLHDnn(extract=extract, hdc_cfg=hdc_cfg)
+    learner.train(sx, sy, spec.n_way, batched=batched)
+    return learner.accuracy(qx, qy)

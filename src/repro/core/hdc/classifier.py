@@ -1,0 +1,95 @@
+"""HDC-based FSL classifier (paper §II-B-2, §III-B-2, §IV-B).
+
+Training is single-pass and gradient-free: class hypervectors are sums of
+encoded sample HVs (Eq. 4). Inference is a distance argmin against the class
+HVs (Eq. 5; the chip uses L1). Class HVs support INT1–16 accumulator
+precisions like the chip's training module.
+
+``train_batched`` is the paper's §V-B batched single-pass training: per-class
+feature aggregation happens *before* encoding, so each class is encoded once
+(k× fewer encoder passes and one codebook-resident FE batch on chip; on TPU it
+raises arithmetic intensity — see benchmarks/batched_training.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hdc import encoding
+
+
+@dataclass(frozen=True)
+class HDCConfig:
+    dim: int = 4096
+    seed: int = 1234
+    impl: str = "hash"            # "hash" | "lfsr" | "rp"
+    block: int = 16
+    binarize: bool = True         # sign-binarize sample HVs before aggregation
+    hv_bits: int = 16             # class-HV accumulator precision (1..16)
+    distance: str = "l1"          # "l1" | "dot" | "cos"
+    rp_key: int = 0               # key for impl == "rp"
+
+
+def encode(cfg: HDCConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, F) features -> (B, D) sample HVs (fp32, ±1 if binarize)."""
+    if cfg.impl == "rp":
+        base = encoding.make_rp_matrix(jax.random.key(cfg.rp_key), cfg.dim, x.shape[-1])
+        h = encoding.rp_encode(x, base)
+    else:
+        h = encoding.crp_encode(x, cfg.seed, cfg.dim, impl=cfg.impl, block=cfg.block)
+    if cfg.binarize:
+        h = jnp.where(h >= 0, 1.0, -1.0)
+    return h
+
+
+def quantize_class_hvs(cfg: HDCConfig, class_hvs: jnp.ndarray) -> jnp.ndarray:
+    """Clip accumulators into the signed ``hv_bits`` range (chip INT1-16)."""
+    lim = float(2 ** (cfg.hv_bits - 1) - 1) if cfg.hv_bits > 1 else 1.0
+    return jnp.clip(class_hvs, -lim, lim)
+
+
+def train_single_pass(cfg: HDCConfig, feats: jnp.ndarray, labels: jnp.ndarray,
+                      n_classes: int, class_hvs: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Eq. 4: C_j = sum_i h_i^j. One pass, no gradients. -> (C, D) fp32."""
+    h = encode(cfg, feats)
+    agg = jax.ops.segment_sum(h, labels, num_segments=n_classes)
+    if class_hvs is not None:
+        agg = agg + class_hvs
+    return quantize_class_hvs(cfg, agg)
+
+
+def train_batched(cfg: HDCConfig, feats: jnp.ndarray, labels: jnp.ndarray,
+                  n_classes: int, class_hvs: jnp.ndarray | None = None) -> jnp.ndarray:
+    """§V-B: aggregate per-class features first, encode each class once."""
+    fagg = jax.ops.segment_sum(feats.astype(jnp.float32), labels, num_segments=n_classes)
+    h = encode(cfg, fagg)
+    if class_hvs is not None:
+        h = h + class_hvs
+    return quantize_class_hvs(cfg, h)
+
+
+def distances(cfg: HDCConfig, class_hvs: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """q: (B, D), class_hvs: (C, D) -> (B, C) distances (smaller = closer)."""
+    qf = q.astype(jnp.float32)
+    cf = class_hvs.astype(jnp.float32)
+    if cfg.distance == "l1":
+        # chip inference: element-wise |q - C| accumulated; normalize class HVs
+        # to the query scale so magnitude differences don't dominate.
+        cn = cf / jnp.maximum(jnp.abs(cf).mean(-1, keepdims=True), 1e-6)
+        return jnp.sum(jnp.abs(qf[:, None] - cn[None]), axis=-1)
+    if cfg.distance == "dot":
+        return -(qf @ cf.T)
+    if cfg.distance == "cos":
+        qn = qf / jnp.maximum(jnp.linalg.norm(qf, axis=-1, keepdims=True), 1e-6)
+        cn = cf / jnp.maximum(jnp.linalg.norm(cf, axis=-1, keepdims=True), 1e-6)
+        return -(qn @ cn.T)
+    raise ValueError(cfg.distance)
+
+
+def predict(cfg: HDCConfig, class_hvs: jnp.ndarray, feats: jnp.ndarray):
+    """-> (preds (B,), dists (B, C))."""
+    q = encode(cfg, feats)
+    d = distances(cfg, class_hvs, q)
+    return jnp.argmin(d, axis=-1), d

@@ -1,0 +1,128 @@
+"""HDC encoders (paper §II-B, §III-B-1).
+
+* ``rp_encode``  — conventional random projection: h = B·x with an explicit
+  ±1 base matrix B in (D, F). O(D·F) storage (the thing the paper kills).
+* ``crp_encode`` — cyclic random projection: B is never stored; 16x16 blocks
+  are generated on the fly. Two generators:
+    - ``impl="lfsr"``: the chip's sequential Galois-LFSR bank (bit-exact
+      reference, O(256 b) state);
+    - ``impl="hash"``: counter-based integer hash — random-access (block (i,j)
+      is a pure function of (seed,i,j)), which is the TPU-parallel adaptation
+      used by the Pallas kernel. Same O(1) storage and JL statistics.
+
+The pure-JAX cRP path streams block-rows so no O(D·F) buffer is ever live —
+working memory is O(block · F).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hdc import lfsr
+
+BLOCK = 16
+
+_M1 = jnp.uint32(0x9E3779B1)
+_M2 = jnp.uint32(0x85EBCA77)
+_M3 = jnp.uint32(0xC2B2AE3D)
+
+
+def _hash_u32(x: jnp.ndarray) -> jnp.ndarray:
+    """xorshift-multiply avalanche on uint32."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_block_words(seed, bi, bj, n_rows: int = BLOCK) -> jnp.ndarray:
+    """uint32 word per row of block (bi,bj); low 16 bits are the row's ±1 bits."""
+    r = jnp.arange(n_rows, dtype=jnp.uint32)
+    key = (jnp.uint32(seed) * _M3) ^ (jnp.asarray(bi, jnp.uint32) * _M1) \
+        ^ (jnp.asarray(bj, jnp.uint32) * _M2) ^ (r * jnp.uint32(0x27D4EB2F))
+    return _hash_u32(key)
+
+
+def hash_block(seed, bi, bj, block: int = BLOCK) -> jnp.ndarray:
+    """(block, block) ±1 float32 block at grid position (bi, bj)."""
+    words = hash_block_words(seed, bi, bj, block)
+    bits = (words[:, None] >> jnp.arange(block, dtype=jnp.uint32)[None, :]) & 1
+    return 2.0 * bits.astype(jnp.float32) - 1.0
+
+
+# ---------------------------------------------------------------------------
+# reference materialization (tests / small problems)
+# ---------------------------------------------------------------------------
+
+def make_rp_matrix(key, D: int, F: int) -> jnp.ndarray:
+    """Conventional RP base matrix: iid ±1, (D, F)."""
+    return jax.random.rademacher(key, (D, F), dtype=jnp.float32)
+
+
+def crp_matrix(seed: int, D: int, F: int, impl: str = "hash",
+               block: int = BLOCK) -> jnp.ndarray:
+    """Materialize the cRP base matrix (testing only — the point is NOT to)."""
+    nd, nf = -(-D // block), -(-F // block)
+    if impl == "hash":
+        bi = jnp.arange(nd)
+        bj = jnp.arange(nf)
+        blocks = jax.vmap(lambda i: jax.vmap(lambda j: hash_block(seed, i, j, block))(bj))(bi)
+    elif impl == "lfsr":
+        flat = lfsr.generate_blocks(seed, nd * nf)           # row-major block order
+        blocks = flat.reshape(nd, nf, block, block)
+    else:
+        raise ValueError(impl)
+    full = blocks.transpose(0, 2, 1, 3).reshape(nd * block, nf * block)
+    return full[:D, :F]
+
+
+# ---------------------------------------------------------------------------
+# encoders
+# ---------------------------------------------------------------------------
+
+def rp_encode(x: jnp.ndarray, base: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, F), base: (D, F) -> (B, D)."""
+    return x.astype(jnp.float32) @ base.T
+
+
+def crp_encode(x: jnp.ndarray, seed: int, D: int, impl: str = "hash",
+               block: int = BLOCK) -> jnp.ndarray:
+    """Streaming cRP encode: x (B, F) -> (B, D); O(block·F) working set.
+
+    Block-row i of B (shape (block, F)) is generated, used, and discarded.
+    """
+    B_, F = x.shape
+    nf = -(-F // block)
+    Fp = nf * block
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, Fp - F)))
+    nd = -(-D // block)
+
+    if impl == "lfsr":
+        # sequential bank: scan over all blocks in row-major order, fold into rows
+        blocks = lfsr.generate_blocks(seed, nd * nf).reshape(nd, nf, block, block)
+
+        def row_dot(i):
+            row = blocks[i].transpose(1, 0, 2).reshape(block, Fp)
+            return xp @ row.T                                        # (B, blk)
+
+        rows = jax.lax.map(row_dot, jnp.arange(nd))                  # (nd, B, blk)
+        return jnp.moveaxis(rows, 0, 1).reshape(B_, nd * block)[:, :D]
+
+    def one_row(i):
+        bj = jnp.arange(nf)
+        row_blocks = jax.vmap(lambda j: hash_block(seed, i, j, block))(bj)   # (nf, blk, blk)
+        row = row_blocks.transpose(1, 0, 2).reshape(block, Fp)               # (blk, Fp)
+        return xp @ row.T                                                    # (B, blk)
+
+    rows = jax.lax.map(one_row, jnp.arange(nd))                              # (nd, B, blk)
+    return jnp.moveaxis(rows, 0, 1).reshape(B_, nd * block)[:, :D]
+
+
+def encoder_storage_bytes(D: int, F: int, kind: str, block: int = BLOCK) -> int:
+    """Paper Fig. 10(c): RP stores D*F bits; cRP stores one block of state."""
+    if kind == "rp":
+        return D * F // 8
+    return block * block // 8  # 256 bits of LFSR/seed state

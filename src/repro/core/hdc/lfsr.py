@@ -1,0 +1,59 @@
+"""Bit-exact Galois LFSR PRNG — the paper's cRP block generator (§IV-B).
+
+16 independent 16-bit Galois LFSRs (taps 0xB400 = x^16+x^14+x^13+x^11+1,
+maximal length) each contribute one 16-bit row per 16x16 cyclic block. Block
+``t`` of the base-matrix grid is the LFSR bank state after ``t`` advances from
+the seed block — reconstructing the whole O(FxD) matrix from O(256) bits of
+state, exactly as the chip does.
+
+This sequential generator is the *algorithmic reference*. The Pallas kernel
+uses a counter-based hash generator (random-access, TPU-parallel) with the
+same O(1)-memory property — see DESIGN.md §2 and ``encoding.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+TAPS = jnp.uint16(0xB400)
+
+
+def lfsr_step(state: jnp.ndarray) -> jnp.ndarray:
+    """One Galois step of a uint16 LFSR state array."""
+    lsb = state & jnp.uint16(1)
+    shifted = state >> jnp.uint16(1)
+    return jnp.where(lsb == 1, shifted ^ TAPS, shifted)
+
+
+def bank_init(seed: int, n_lfsr: int = 16) -> jnp.ndarray:
+    """Derive ``n_lfsr`` nonzero uint16 initial states from one integer seed."""
+    s = jnp.arange(1, n_lfsr + 1, dtype=jnp.uint32) * jnp.uint32(0x9E37) + jnp.uint32(seed)
+    s = (s ^ (s >> 7)) * jnp.uint32(0x2545F)
+    s = (s & jnp.uint32(0xFFFF)).astype(jnp.uint16)
+    return jnp.where(s == 0, jnp.uint16(0xACE1), s)
+
+
+def state_to_block(state: jnp.ndarray) -> jnp.ndarray:
+    """(16,) uint16 LFSR states -> (16,16) ±1 block (bit r of LFSR l = row l col r)."""
+    bits = (state[:, None].astype(jnp.uint32) >> jnp.arange(16, dtype=jnp.uint32)[None, :]) & 1
+    return (2.0 * bits.astype(jnp.float32) - 1.0)
+
+
+def generate_blocks(seed: int, n_blocks: int, n_lfsr: int = 16,
+                    steps_per_block: int = 16) -> jnp.ndarray:
+    """Sequentially generate ``n_blocks`` 16x16 ±1 blocks -> (n_blocks, 16, 16).
+
+    Each LFSR contributes "a 16-bit output" per cyclic block (paper §IV-B), so
+    the bank advances a full word (16 shifts) between blocks — consecutive
+    blocks would otherwise share 15/16 bits per row (correlated projections,
+    measurably worse FSL accuracy; see EXPERIMENTS.md)."""
+    s0 = bank_init(seed, n_lfsr)
+
+    def step(state, _):
+        block = state_to_block(state)
+        for _ in range(steps_per_block):
+            state = lfsr_step(state)
+        return state, block
+
+    _, blocks = jax.lax.scan(step, s0, None, length=n_blocks)
+    return blocks

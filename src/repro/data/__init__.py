@@ -1,0 +1,4 @@
+"""Data pipeline: synthetic LM stream, episodic FSL sampler, prefetch."""
+from repro.data.synthetic import SyntheticLMStream, synthetic_feature_pool
+from repro.data.episodes import EpisodicSampler
+from repro.data.prefetch import PrefetchIterator

@@ -1,0 +1,63 @@
+"""Episodic N-way k-shot sampler for FSL-HDnn on-device learning runs.
+
+Yields (support, query) batches with episode-local labels. Deterministic and
+checkpointable (same contract as SyntheticLMStream).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class EpisodicSampler:
+    feats: np.ndarray       # (N, F) pooled features from a frozen extractor
+    labels: np.ndarray      # (N,)
+    n_way: int = 10
+    k_shot: int = 5
+    n_query: int = 15
+    seed: int = 0
+
+    def __post_init__(self):
+        self._step = 0
+        self._classes = np.unique(self.labels)
+        assert len(self._classes) >= self.n_way, \
+            f"pool has {len(self._classes)} classes < n_way={self.n_way}"
+        self._by_class = {int(c): np.where(self.labels == c)[0]
+                          for c in self._classes}
+
+    def episode(self, step: int | None = None) -> dict:
+        step = self._step if step is None else step
+        rng = np.random.default_rng((self.seed, step))
+        chosen = rng.choice(self._classes, size=self.n_way, replace=False)
+        sx, sy, qx, qy = [], [], [], []
+        for new_c, c in enumerate(chosen):
+            idx = self._by_class[int(c)]
+            pick = rng.choice(idx, size=min(self.k_shot + self.n_query, len(idx)),
+                              replace=False)
+            sx.append(self.feats[pick[:self.k_shot]])
+            sy += [new_c] * self.k_shot
+            qx.append(self.feats[pick[self.k_shot:]])
+            qy += [new_c] * (len(pick) - self.k_shot)
+        return {
+            "support_x": np.concatenate(sx).astype(np.float32),
+            "support_y": np.asarray(sy, np.int32),
+            "query_x": np.concatenate(qx).astype(np.float32),
+            "query_y": np.asarray(qy, np.int32),
+        }
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> dict:
+        ep = self.episode()
+        self._step += 1
+        return ep
+
+    def state_dict(self) -> dict:
+        return {"step": self._step, "seed": self.seed}
+
+    def load_state_dict(self, st: dict) -> None:
+        assert st["seed"] == self.seed
+        self._step = int(st["step"])

@@ -1,0 +1,75 @@
+"""Double-buffered background prefetch with straggler accounting.
+
+A worker thread keeps ``depth`` batches ahead of the consumer. If the source
+stalls longer than ``straggler_timeout_s`` the consumer either re-serves the
+last batch (``policy="reuse"`` — the classic straggler-skip trick: training
+quality barely moves, step time stays bounded) or blocks (``policy="wait"``).
+Stall events are counted so the supervisor can surface them.
+
+This is the CPU-simulable half of straggler mitigation; collective-level
+mitigation (backup workers) is a deploy-time policy documented in DESIGN.md.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Iterator
+
+
+class PrefetchIterator:
+    def __init__(self, source: Iterator, *, depth: int = 2,
+                 straggler_timeout_s: float = 5.0, policy: str = "reuse"):
+        assert policy in ("reuse", "wait")
+        self._source = source
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._policy = policy
+        self._timeout = straggler_timeout_s
+        self._last = None
+        self.stalls = 0
+        self.served = 0
+        self.reused = 0
+        self._done = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        try:
+            for item in self._source:
+                if self._done.is_set():
+                    return
+                while True:
+                    try:
+                        self._q.put(item, timeout=0.5)
+                        break
+                    except queue.Full:
+                        if self._done.is_set():
+                            return
+        finally:
+            self._q.put(StopIteration)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        try:
+            item = self._q.get(timeout=self._timeout)
+        except queue.Empty:
+            self.stalls += 1
+            if self._policy == "reuse" and self._last is not None:
+                self.reused += 1
+                self.served += 1
+                return self._last
+            item = self._q.get()    # block until the straggler recovers
+        if item is StopIteration:
+            raise StopIteration
+        self._last = item
+        self.served += 1
+        return item
+
+    def close(self):
+        self._done.set()
+
+    def stats(self) -> dict:
+        return {"served": self.served, "stalls": self.stalls,
+                "reused": self.reused}

@@ -1,0 +1,316 @@
+"""Sharding rules: FSDP x TP x SP x EP, expressed as PartitionSpecs derived
+from param-tree paths + shapes.
+
+Scheme (DESIGN.md §5):
+* params — 2-D sharded: the Megatron TP dim on ``model``, the other large dim
+  on the data axes (FSDP/ZeRO-3; GSPMD inserts the per-layer all-gathers).
+  Column-parallel kernels (wq/wk/wv/w_gate/w_up/...) shard d_out on model;
+  row-parallel (wo/w_down/w_out) shard d_in on model. MoE expert weights shard
+  each expert's d_ff on model (EP-TP; expert count stays unsharded so any
+  expert count divides). A dim is sharded only if divisible by the axis size.
+* activations — batch on data axes; residual-stream seq dim on model
+  (Megatron sequence parallelism) when divisible.
+* KV caches — kv-head dim on model when divisible, else the cache *sequence*
+  dim on model (balanced for GQA with few kv heads; softmax partial-reduce
+  collectives are inserted by GSPMD).
+* optimizer state — mirrors param specs (ZeRO).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.nn import layers as L
+
+# kernel-holder module names -> which dim gets TP ("col" => d_out, "row" => d_in)
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "w_rec_in", "w_zifo", "w_i", "w_f",
+        "w_dkv", "w_uk", "w_uv", "lm_head", "w_a", "w_x"}
+_ROW = {"wo", "w_down", "w_out"}
+
+
+@dataclass
+class Dist:
+    mesh: Mesh
+    cfg: ModelConfig
+    dp_axes: tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+    # perf-5: pure-FSDP mode — batch sharded over EVERY mesh axis, no
+    # tensor-parallel activations (params stay 2-D sharded = ZeRO-3; GSPMD
+    # inserts per-layer param all-gathers + grad reduce-scatters).
+    dp_only: bool = False
+
+    @property
+    def all_axes(self) -> tuple[str, ...]:
+        return tuple(self.mesh.axis_names)
+
+    @property
+    def dp_size(self) -> int:
+        axes = self.all_axes if self.dp_only else self.dp_axes
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+    @property
+    def tp_size(self) -> int:
+        return int(self.mesh.shape[self.tp_axis])
+
+    def ns(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # -- activations ---------------------------------------------------------
+    def shd(self, tag: str, x: jnp.ndarray) -> jnp.ndarray:
+        return jax.lax.with_sharding_constraint(x, self.ns(self.act_spec(tag, x.shape)))
+
+    def act_spec(self, tag: str, shape) -> P:
+        if self.dp_only:
+            b = self.all_axes if shape[0] % self.dp_size == 0 else None
+            return P(b, *([None] * (len(shape) - 1)))
+        dp = self.dp_axes if shape[0] % self.dp_size == 0 else None
+        tp = self.tp_axis
+        if tag == "act":
+            B, S, d = shape
+            seq = (tp if (self.cfg.seq_shard_activations and S > 1
+                          and S % self.tp_size == 0) else None)
+            return P(dp, seq, None)
+        if tag == "logits":
+            B, S, V = shape
+            v = tp if V % self.tp_size == 0 else None
+            return P(dp, None, v)
+        # --- perf-1: explicit attention layouts (opt_attn_sharding) ----------
+        # q/k/v leave the projections head-sharded when the head dim divides
+        # the model axis, else replicated over it — either way the gather off
+        # the seq-sharded residual happens ONCE, outside the attention loops.
+        if tag == "kv4":                       # (B, T, KVH, hd)
+            h = tp if shape[2] % self.tp_size == 0 else None
+            return P(dp, None, h, None)
+        if tag == "q5":                        # (B, S, KVH, G, hd)
+            if shape[2] % self.tp_size == 0:
+                return P(dp, None, tp, None, None)
+            if shape[3] % self.tp_size == 0:   # GQA groups shardable instead
+                return P(dp, None, None, tp, None)
+            return P(dp, None, None, None, None)
+        if tag == "seq_rep":                   # (B, S, d): gather seq once
+            return P(dp, None, None)
+        if tag == "rep":                       # fully replicate (tiny recurrent
+            return P(*([None] * len(shape)))   # weights used inside seq-scans)
+        raise ValueError(tag)
+
+    # -- params ---------------------------------------------------------------
+    def _div(self, n: int, axes) -> bool:
+        if axes is None:
+            return True
+        sz = (int(np.prod([self.mesh.shape[a] for a in axes]))
+              if isinstance(axes, tuple) else self.mesh.shape[axes])
+        return n % sz == 0
+
+    def param_spec(self, path: tuple[str, ...], shape: tuple[int, ...]) -> P:
+        stacked = "unit_blocks" in path   # scan-stacked: leading repeat dim
+        base = shape[1:] if stacked else shape
+        spec = self._param_spec_base(path, base)
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    def _param_spec_base(self, path, shape) -> P:
+        name = path[-1]          # leaf name: kernel/bias/scale/embedding/...
+        holder = path[-2] if len(path) >= 2 else ""
+        dp, tp = self.dp_axes, self.tp_axis
+
+        if name == "embedding":                       # (V, d)
+            v = tp if self._div(shape[0], tp) else None
+            d = dp if self._div(shape[1], dp) else None
+            return P(v, d)
+        if name == "kernel" and len(shape) == 2:
+            d_in, d_out = shape
+            if holder in _COL:
+                o = tp if self._div(d_out, tp) else None
+                i = dp if self._div(d_in, dp) else None
+                return P(i, o)
+            if holder in _ROW:
+                i = tp if self._div(d_in, tp) else None
+                o = dp if self._div(d_out, dp) else None
+                return P(i, o)
+            # generic dense (in_proj/vision_proj/shared experts handled below)
+            o = tp if self._div(d_out, tp) else None
+            i = dp if self._div(d_in, dp) else None
+            return P(i, o)
+        if name == "kernel" and len(shape) == 4:      # conv (resnet; replicated)
+            return P(None, None, None, None)
+        if name in ("w_gate", "w_up") and len(shape) == 3:   # MoE (E, d, ff)
+            ff = tp if self._div(shape[2], tp) else None
+            d = dp if self._div(shape[1], dp) else None
+            return P(None, d, ff)
+        if name == "w_down" and len(shape) == 3:      # MoE (E, ff, d)
+            ff = tp if self._div(shape[1], tp) else None
+            d = dp if self._div(shape[2], dp) else None
+            return P(None, ff, d)
+        if name == "router":                          # (d, E) small
+            return P(None, None)
+        if name == "bias" and len(shape) == 1:
+            if holder in _COL and self._div(shape[0], tp):
+                return P(tp)
+            return P(None)
+        # norms, gates, lam, conv_w/b, r_zifo, codebooks: replicate
+        return P(*([None] * len(shape)))
+
+    def unit_param_constrainer(self):
+        """perf-6: constrain the per-iteration SLICE of scanned layer params
+        back to its sharded spec inside the scan body. Without this, GSPMD
+        reshards the whole stacked xs to the body's (replicated) use before
+        the loop — materializing a full unsharded copy of the model per
+        device (the 1-bf16-byte-per-param temp blow-up) and gathering ALL
+        layers per pass instead of one layer per iteration."""
+        def fn(tree):
+            flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+            out = []
+            for kp, leaf in flat:
+                path = tuple(getattr(k, "key", str(k)) for k in kp)
+                spec = self._param_spec_base(path, tuple(leaf.shape))
+                out.append(jax.lax.with_sharding_constraint(leaf, self.ns(spec)))
+            return jax.tree_util.tree_unflatten(treedef, out)
+        return fn
+
+    def param_specs(self, params_shape: Any) -> Any:
+        """Map a params pytree (of ShapeDtypeStruct or arrays) -> spec pytree."""
+        flat, tree = jax.tree_util.tree_flatten_with_path(params_shape)
+        specs = []
+        for kp, leaf in flat:
+            path = tuple(getattr(k, "key", str(k)) for k in kp)
+            specs.append(self.param_spec(path, tuple(leaf.shape)))
+        return jax.tree_util.tree_unflatten(tree, specs)
+
+    # -- KV caches -------------------------------------------------------------
+    def cache_spec(self, path: tuple[str, ...], shape: tuple[int, ...]) -> P:
+        stacked = "unit" in path
+        base = list(shape[1:] if stacked else shape)
+        name = path[-1]
+        dp, tp = self.dp_axes, self.tp_axis
+        spec: list = [None] * len(base)
+        if name in ("k", "v") and len(base) == 4:       # (B, S, KVH, hd)
+            if self._div(base[0], dp):
+                spec[0] = dp
+            if self._div(base[2], tp):
+                spec[2] = tp                            # head-sharded
+            elif self._div(base[1], tp):
+                spec[1] = tp                            # seq-sharded fallback
+        elif name == "c_kv":                            # (B, S, lora)
+            if self._div(base[0], dp):
+                spec[0] = dp
+            if self._div(base[2], tp):
+                spec[2] = tp
+        elif name == "k_pe":                            # (B, S, rope_dim) small
+            if self._div(base[0], dp):
+                spec[0] = dp
+        elif name == "C" and len(base) == 4:            # mLSTM (B, H, dhk, dhv)
+            if self._div(base[0], dp):
+                spec[0] = dp
+            if self._div(base[2], tp):
+                spec[2] = tp
+        elif name in ("n",) and len(base) == 3:         # (B, H, dh)
+            if self._div(base[0], dp):
+                spec[0] = dp
+            if self._div(base[2], tp):
+                spec[2] = tp
+        elif name in ("conv",):                         # (B, K-1, w)
+            if self._div(base[0], dp):
+                spec[0] = dp
+            if self._div(base[2], tp):
+                spec[2] = tp
+        elif name in ("h", "c", "m") and len(base) == 2:  # (B, d)
+            if self._div(base[0], dp):
+                spec[0] = dp
+            if self._div(base[1], tp):
+                spec[1] = tp
+        elif name == "m" and len(base) == 2:
+            if self._div(base[0], dp):
+                spec[0] = dp
+        else:  # slot_pos (S,), scalars m (B,H), etc.
+            if len(base) >= 1 and name not in ("slot_pos",) and self._div(base[0], dp) and len(base) > 1:
+                spec[0] = dp
+        if stacked:
+            spec = [None] + spec
+        return P(*spec)
+
+    def cache_specs(self, cache_shape: Any) -> Any:
+        flat, tree = jax.tree_util.tree_flatten_with_path(cache_shape)
+        specs = []
+        for kp, leaf in flat:
+            path = tuple(getattr(k, "key", str(k)) for k in kp)
+            specs.append(self.cache_spec(path, tuple(leaf.shape)))
+        return jax.tree_util.tree_unflatten(tree, specs)
+
+    # -- batch -----------------------------------------------------------------
+    def batch_specs(self, batch_shape: dict) -> dict:
+        out = {}
+        axes = self.all_axes if self.dp_only else self.dp_axes
+        for k, v in batch_shape.items():
+            if len(v.shape) == 0:
+                out[k] = P()
+                continue
+            dp = axes if v.shape[0] % self.dp_size == 0 else None
+            if k in ("tokens", "labels"):
+                out[k] = P(dp, None)
+            elif k == "embeds":
+                out[k] = P(dp, None, None)
+            elif k == "vision":
+                out[k] = P(dp, None, None)
+            elif k == "pos":
+                out[k] = P()
+            else:
+                out[k] = P(*([dp] + [None] * (len(v.shape) - 1)))
+        return out
+
+    # -- MoE via shard_map (EP-TP with explicit collectives) --------------------
+    def moe_fn(self):
+        mesh, dp_axes, tp = self.mesh, self.dp_axes, self.tp_axis
+
+        def fn(p, cfg: ModelConfig, x):
+            B, S, d = x.shape
+            dp_ok = B % self.dp_size == 0
+            seq_sh = cfg.seq_shard_activations and S > 1 and S % self.tp_size == 0
+            dpa = dp_axes if dp_ok else None
+            x_spec = P(dpa, tp if seq_sh else None, None)
+            p_specs = jax.tree.map(lambda l: P(*([None] * l.ndim)), p)
+            p_specs["w_gate"] = P(None, None, tp)
+            p_specs["w_up"] = P(None, None, tp)
+            p_specs["w_down"] = P(None, tp, None)
+            if "shared" in p:
+                p_specs["shared"] = {
+                    "w_gate": {"kernel": P(None, tp)},
+                    "w_up": {"kernel": P(None, tp)},
+                    "w_down": {"kernel": P(tp, None)},
+                }
+
+            def local(x_loc, p_loc):
+                if seq_sh:
+                    x_full = jax.lax.all_gather(x_loc, tp, axis=1, tiled=True)
+                else:
+                    x_full = x_loc
+                Bl, Sl, _ = x_full.shape
+                # expert d_ff is a local shard here -> y is a partial sum; the
+                # psum/psum_scatter below completes the row-parallel reduction
+                y, aux = L.moe_apply_2d(p_loc, cfg, x_full.reshape(Bl * Sl, d))
+                y = y.reshape(Bl, Sl, d)
+                if seq_sh:
+                    y = jax.lax.psum_scatter(y, tp, scatter_dimension=1, tiled=True)
+                else:
+                    y = jax.lax.psum(y, tp)
+                for ax in mesh.axis_names:
+                    aux = jax.lax.pmean(aux, ax)
+                return y, aux
+
+            sm = jax.shard_map(local, mesh=mesh, in_specs=(x_spec, p_specs),
+                               out_specs=(x_spec, P()), check_vma=False)
+            return sm(x, p)
+
+        return fn
+
+
+def make_dist(mesh: Mesh, cfg: ModelConfig) -> Dist:
+    dp_axes = tuple(a for a in mesh.axis_names if a != "model")
+    return Dist(mesh=mesh, cfg=cfg, dp_axes=dp_axes)

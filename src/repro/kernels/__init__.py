@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the chip's three compute hot-spots, each with a
+jit'd wrapper (ops.py) and a pure-jnp oracle (ref.py):
+
+* ``crp_encode``       — cyclic-RP encoding; the base matrix is generated
+                         inside the kernel (O(F*D) -> O(1) memory, paper IV-B)
+* ``clustered_matmul`` — codebook-decompress-in-VMEM matmul (paper III-A on
+                         TPU: the dense weight never exists in HBM)
+* ``hdc_distance``     — L1/dot distance search over class HVs (paper IV-B)
+"""
+from repro.kernels import ops, ref

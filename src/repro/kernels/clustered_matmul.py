@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: clustered-weight matmul (paper §III-A on TPU).
+
+y = x @ W with W stored compressed: per-element ``bits``-bit centroid indices
+(one int8 per weight here) + a tiny per-group codebook, group = ``ch_sub``
+consecutive input rows. The kernel gathers ``codebook[group(k), idx[k, n]]``
+*inside VMEM* to rebuild each (bK, bN) weight tile and feeds the MXU — the
+dense bf16 weight never exists in HBM, cutting weight-side HBM traffic by
+~16/bits (the roofline term that dominates decode; DESIGN.md §2).
+
+Grid: (M/bM, N/bN, K/bK); K is the reduction axis. Requires bK % ch_sub == 0
+or ch_sub % bK == 0 so each K-tile covers whole groups.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, idx_ref, cb_ref, o_ref, *, ch_sub: int, bK: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    idx = idx_ref[...].astype(jnp.int32)                        # (bK, bN)
+    cb = cb_ref[...].astype(jnp.float32)                        # (groups_in_tile, ncent)
+    if cb.shape[0] * ch_sub != bK:  # ch_sub > bK: single group slice
+        cb_rows = jnp.broadcast_to(cb[:1], (bK, cb.shape[1]))
+    else:
+        cb_rows = jnp.repeat(cb, ch_sub, axis=0)                # (bK, ncent)
+    w = jnp.take_along_axis(cb_rows, idx, axis=1)               # (bK, bN) decompressed
+    x = x_ref[...].astype(jnp.float32)                          # (bM, bK)
+    o_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("ch_sub", "bM", "bN", "bK", "interpret"))
+def clustered_matmul(x: jnp.ndarray, idx: jnp.ndarray, codebook: jnp.ndarray, *,
+                     ch_sub: int, bM: int = 8, bN: int = 128, bK: int = 128,
+                     interpret: bool = True) -> jnp.ndarray:
+    """x: (M, K); idx: (K, N) int8/int32; codebook: (K//ch_sub, ncent) -> (M, N) fp32."""
+    M, K = x.shape
+    K2, N = idx.shape
+    assert K == K2 and K % ch_sub == 0, (K, K2, ch_sub)
+    bK = min(bK, K)
+    if bK % ch_sub and ch_sub % bK:
+        bK = ch_sub
+    assert M % bM == 0 or M < bM, "pad M below"
+    Mp = -(-M // bM) * bM
+    Np = -(-N // bN) * bN
+    assert K % bK == 0, (K, bK)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, Mp - M), (0, 0)))
+    idxp = jnp.pad(idx, ((0, 0), (0, Np - N)))
+    nc = codebook.shape[1]
+    if bK >= ch_sub:
+        # each K-tile covers bK/ch_sub whole groups -> group-block index = k
+        cb_spec = pl.BlockSpec((bK // ch_sub, nc), lambda i, j, k: (k, 0))
+    else:
+        # each K-tile sits inside one group -> group index = k*bK // ch_sub
+        cb_spec = pl.BlockSpec((1, nc), lambda i, j, k: ((k * bK) // ch_sub, 0))
+    grid = (Mp // bM, Np // bN, K // bK)
+    out = pl.pallas_call(
+        functools.partial(_kernel, ch_sub=ch_sub, bK=bK),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bM, bK), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bK, bN), lambda i, j, k: (k, j)),
+            cb_spec,
+        ],
+        out_specs=pl.BlockSpec((bM, bN), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        interpret=interpret,
+    )(xp, idxp, codebook)
+    return out[:M, :N]

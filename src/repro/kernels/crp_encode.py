@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: cyclic Random Projection encode (paper §IV-B).
+
+h[b, d] = sum_f B[d, f] * x[b, f], where the ±1 base matrix B is NEVER stored:
+each (16x16) cyclic block is generated *inside the kernel* from (seed, block
+coords) by a counter-based integer-hash PRNG — the TPU-parallel adaptation of
+the chip's LFSR bank (see DESIGN.md §2). VMEM working set per grid step is one
+(block_d, block_f) generated tile + one (block_b, block_f) feature tile +
+the (block_b, block_d) accumulator; HBM traffic for the projection matrix is
+ZERO, which is the paper's O(F·D) -> O(1) memory claim realized on TPU.
+
+Grid: (B/bB, D/bD, F/bF); the F axis is the reduction — the output tile is
+revisited across it and accumulated in fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CBLK = 16  # cyclic block edge, fixed by the chip (16 LFSRs x 16 bits)
+
+_M1 = 0x9E3779B1
+_M2 = 0x85EBCA77
+_M3 = 0xC2B2AE3D
+_MR = 0x27D4EB2F
+
+
+def _hash_u32(x):
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def _gen_tile(seed: int, d0, f0, bD: int, bF: int) -> jnp.ndarray:
+    """Generate the (bD, bF) ±1 tile of the cRP matrix starting at (d0, f0).
+
+    Element (d, f) lives in cyclic block (d//16, f//16), row r=d%16, col c=f%16;
+    its bit is bit c of hash(seed, bi, bj, r) — identical to
+    repro.core.hdc.encoding.hash_block_words.
+    """
+    d = d0 + jax.lax.broadcasted_iota(jnp.uint32, (bD, bF), 0)
+    f = f0 + jax.lax.broadcasted_iota(jnp.uint32, (bD, bF), 1)
+    bi, r = d // CBLK, d % CBLK
+    bj, c = f // CBLK, f % CBLK
+    key = (jnp.uint32(seed) * jnp.uint32(_M3)) ^ (bi * jnp.uint32(_M1)) \
+        ^ (bj * jnp.uint32(_M2)) ^ (r * jnp.uint32(_MR))
+    bits = (_hash_u32(key) >> c) & jnp.uint32(1)
+    return 2.0 * bits.astype(jnp.float32) - 1.0
+
+
+def _kernel(x_ref, o_ref, *, seed: int, bD: int, bF: int):
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    d0 = (j * bD).astype(jnp.uint32)
+    f0 = (k * bF).astype(jnp.uint32)
+    tile = _gen_tile(seed, d0, f0, bD, bF)                     # (bD, bF) ±1
+    x = x_ref[...].astype(jnp.float32)                          # (bB, bF)
+    o_ref[...] += jax.lax.dot_general(
+        x, tile, (((1,), (1,)), ((), ())),                      # x @ tile.T
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("seed", "D", "bB", "bD", "bF", "interpret"))
+def crp_encode(x: jnp.ndarray, *, seed: int, D: int, bB: int = 8, bD: int = 128,
+               bF: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """x: (B, F) -> (B, D) fp32. Pads B/F/D up to block multiples."""
+    B, F = x.shape
+    Bp = -(-B // bB) * bB
+    Fp = -(-F // bF) * bF
+    Dp = -(-D // bD) * bD
+    xp = jnp.pad(x.astype(jnp.float32), ((0, Bp - B), (0, Fp - F)))
+    grid = (Bp // bB, Dp // bD, Fp // bF)
+    out = pl.pallas_call(
+        functools.partial(_kernel, seed=seed, bD=bD, bF=bF),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bB, bF), lambda i, j, k: (i, k))],
+        out_specs=pl.BlockSpec((bB, bD), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Dp), jnp.float32),
+        interpret=interpret,
+    )(xp)
+    return out[:B, :D]

@@ -1,0 +1,36 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels TARGET TPU v5e — BlockSpecs are chosen for (8,128)/MXU alignment and
+~2 MB VMEM working sets) and False on real TPU backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import crp_encode as _crp
+from repro.kernels import clustered_matmul as _cm
+from repro.kernels import hdc_distance as _hd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def crp_encode(x: jnp.ndarray, *, seed: int, D: int, bB: int = 8,
+               bD: int = 128, bF: int = 128) -> jnp.ndarray:
+    return _crp.crp_encode(x, seed=seed, D=D, bB=bB, bD=bD, bF=bF,
+                           interpret=_interpret())
+
+
+def clustered_matmul(x, idx, codebook, *, ch_sub: int, bM: int = 8,
+                     bN: int = 128, bK: int = 128) -> jnp.ndarray:
+    return _cm.clustered_matmul(x, idx, codebook, ch_sub=ch_sub, bM=bM, bN=bN,
+                                bK=bK, interpret=_interpret())
+
+
+def hdc_distance(q, chv, *, mode: str = "l1", bB: int = 8, bC: int = 32,
+                 bD: int = 512) -> jnp.ndarray:
+    return _hd.hdc_distance(q, chv, mode=mode, bB=bB, bC=bC, bD=bD,
+                            interpret=_interpret())

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.hdc import encoding
+
+
+def crp_encode_ref(x: jnp.ndarray, *, seed: int, D: int) -> jnp.ndarray:
+    """Materialize the hash-cRP matrix and multiply."""
+    B = encoding.crp_matrix(seed, D, x.shape[-1], impl="hash")
+    return x.astype(jnp.float32) @ B.T
+
+
+def clustered_matmul_ref(x: jnp.ndarray, idx: jnp.ndarray, codebook: jnp.ndarray,
+                         *, ch_sub: int) -> jnp.ndarray:
+    """Decompress W = codebook[group(k), idx[k, n]] and matmul."""
+    K, N = idx.shape
+    groups = jnp.repeat(jnp.arange(K // ch_sub), ch_sub)
+    w = codebook.astype(jnp.float32)[groups[:, None], idx.astype(jnp.int32)]
+    return x.astype(jnp.float32) @ w
+
+
+def hdc_distance_ref(q: jnp.ndarray, chv: jnp.ndarray, *, mode: str = "l1") -> jnp.ndarray:
+    qf, cf = q.astype(jnp.float32), chv.astype(jnp.float32)
+    if mode == "l1":
+        return jnp.abs(qf[:, None, :] - cf[None, :, :]).sum(-1)
+    return -(qf @ cf.T)

@@ -1,0 +1,312 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract the roofline terms from the compiled artifact.
+
+This proves the distribution config is coherent without hardware: a sharding
+mismatch, an OOM-at-compile, or an unsupported collective is a bug HERE, not
+at deploy time.  Single-pod mesh = (16, 16) over (data, model) = 256 chips;
+multi-pod = (2, 16, 16) over (pod, data, model) = 512 chips.
+
+Per cell we record:
+  * ``memory_analysis``  — per-device argument/output/temp bytes (fits HBM?)
+  * ``cost_analysis``    — per-device HLO FLOPs & bytes accessed
+  * collective bytes     — parsed from the post-SPMD compiled HLO, summed per
+    collective kind (all-gather/all-reduce/reduce-scatter/all-to-all/
+    collective-permute)
+  * the three roofline terms in seconds (TPU v5e constants; see
+    ``repro.launch.roofline``)
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  python -m repro.launch.dryrun --all [--multipod] [--out results/dryrun]
+  python -m repro.launch.dryrun --paper        # resnet18_fsl paper cells
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import RunConfig, SHAPES
+from repro.distributed.sharding import make_dist
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.launch import steps as St
+from repro.optim import adamw_init
+
+P = jax.sharding.PartitionSpec
+
+# ---------------------------------------------------------------------------
+# cell construction: (arch, shape) -> (fn, arg_specs, in_shardings, donate)
+# ---------------------------------------------------------------------------
+
+BASELINE_FLAGS = dict(opt_attn_sharding=False, opt_fused_loss=False,
+                      opt_scan_gather=False, mla_absorb=False,
+                      opt_dp_only_train=False, opt_scan_param_constraint=False,
+                      mlstm_chunk=0)   # perf-8: quadratic mLSTM in baseline
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, step_kind: str | None = None,
+               baseline: bool = False, overrides: dict | None = None):
+    cfg = configs.get_config(arch)
+    if baseline:
+        cfg = cfg.replace(**BASELINE_FLAGS)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    dist = make_dist(mesh, cfg)
+    kind_pre = step_kind or shape.kind
+    # perf-5: pure-FSDP for dense train-like steps when batch divides the mesh
+    if (cfg.opt_dp_only_train and kind_pre in ("train", "fsl")
+            and (cfg.n_experts == 0 or cfg.opt_moe_dp_only)
+            and shape.global_batch % mesh.size == 0):
+        dist.dp_only = True
+    run = RunConfig()
+
+    params_sds = S.param_shapes(cfg)
+    p_specs = dist.param_specs(params_sds)
+    batch_sds = S.input_specs(cfg, shape)
+    b_specs = dist.batch_specs(batch_sds)
+    kind = step_kind or shape.kind
+
+    if kind == "train":
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        o_specs = {"m": p_specs, "v": p_specs, "step": P()}
+        fn = St.make_train_step(cfg, run, dist)
+        args = (params_sds, opt_sds, batch_sds)
+        in_sh = (p_specs, o_specs, b_specs)
+        out_sh = (p_specs, o_specs, None)
+        donate = (0, 1)
+    elif kind == "prefill":
+        fn = St.make_prefill_step(cfg, dist)
+        args = (params_sds, batch_sds)
+        in_sh = (p_specs, b_specs)
+        out_sh = None
+        donate = ()
+    elif kind == "decode":
+        cache_sds = S.cache_shapes(cfg, shape)
+        c_specs = dist.cache_specs(cache_sds)
+        fn = St.make_serve_step(cfg, dist)
+        args = (params_sds, cache_sds, batch_sds)
+        in_sh = (p_specs, c_specs, b_specs)
+        out_sh = (None, c_specs)
+        donate = (1,)
+    elif kind == "fsl":  # the paper's single-pass FSL train step on this backbone
+        n_classes = 32
+        hv_sds = jax.eval_shape(lambda: St.init_class_hvs(cfg, n_classes))
+        hv_specs = jax.tree.map(lambda _: P(), hv_sds)
+        batch_sds = S.fsl_batch_specs(cfg, shape, n_classes)
+        b_specs = dist.batch_specs(batch_sds)
+        fn = St.make_fsl_train_step(cfg, n_classes, dist)
+        args = (params_sds, hv_sds, batch_sds)
+        in_sh = (p_specs, hv_specs, b_specs)
+        out_sh = hv_specs
+        donate = (1,)
+    else:
+        raise ValueError(kind)
+
+    def to_ns(tree_specs):
+        return jax.tree.map(lambda s: None if s is None else dist.ns(s), tree_specs,
+                            is_leaf=lambda x: isinstance(x, P) or x is None)
+
+    return fn, args, to_ns(in_sh), (to_ns(out_sh) if out_sh is not None else None), donate
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
+                step_kind: str | None = None, keep_hlo: bool = False,
+                lower_only: bool = False, baseline: bool = False,
+                overrides: dict | None = None) -> dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fn, args, in_sh, out_sh, donate = build_cell(arch, shape_name, mesh,
+                                                 step_kind=step_kind,
+                                                 baseline=baseline,
+                                                 overrides=overrides)
+    with mesh:
+        jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                      donate_argnums=donate)
+        lowered = jfn.lower(*args)
+        t_lower = time.time() - t0
+        if lower_only:
+            return {"arch": arch, "shape": shape_name, "lowered": True,
+                    "mesh": "2x16x16" if multi_pod else "16x16",
+                    "lower_s": round(t_lower, 1)}
+        # jaxpr-exact flops/bytes (XLA cost_analysis counts loop bodies ONCE;
+        # see launch/roofline.py) — computed pre-compile from the same fn/args.
+        from repro.launch import roofline as RL
+        jx = RL.jaxpr_cost(fn, args, n_devices=512 if multi_pod else 256)
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "generated_code_bytes": int(mem.generated_code_size_in_bytes),
+        }
+    except Exception as e:  # pragma: no cover - backend-dependent
+        mem_d = {"error": str(e)}
+
+    try:
+        ca = compiled.cost_analysis()
+        cost = {k: float(v) for k, v in ca.items()
+                if np.isscalar(v) and not k.startswith("utilization")}
+    except Exception as e:  # pragma: no cover
+        cost = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    from repro.launch import roofline as RL
+    coll = RL.collective_bytes_looped(hlo)
+
+    res = {
+        "arch": arch, "shape": shape_name,
+        "step": step_kind or SHAPES[shape_name].kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem_d, "cost": cost, "collectives": coll,
+        "jaxpr": jx,
+        "hlo_bytes": len(hlo),
+    }
+    if keep_hlo:
+        res["hlo"] = hlo
+    return res
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def paper_cells() -> list[tuple[str, str, str]]:
+    """The paper-technique cells: FSL single-pass train on LM backbones
+    (resnet18_fsl is exercised on CPU in tests/benchmarks, not on the pod)."""
+    return [
+        ("qwen2-0.5b", "train_4k", "fsl"),
+        ("hubert-xlarge", "train_4k", "fsl"),
+    ]
+
+
+def cell_list(*, multi_pod: bool, include_paper: bool = True):
+    todo, skips = [], []
+    for a, s, runs, why in configs.all_cells():
+        (todo if runs else skips).append((a, s, None) if runs else (a, s, why))
+    if include_paper:
+        todo += [(a, s, k) for a, s, k in paper_cells()]
+    return todo, skips
+
+
+def run_all(out_dir: Path, *, multi_pod: bool, lower_only: bool = False,
+            timeout: int = 3600):
+    """Driver: one subprocess per cell (isolates OOM/compiler state; results
+    accumulate as JSON so the sweep is resumable)."""
+    import subprocess
+    out_dir.mkdir(parents=True, exist_ok=True)
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    todo, skips = cell_list(multi_pod=multi_pod)
+    for a, s, why in skips:
+        (out_dir / f"{a}__{s}__auto__{mesh_tag}.json").write_text(json.dumps(
+            {"arch": a, "shape": s, "skip": why, "mesh": mesh_tag}, indent=1))
+
+    for a, s, k in todo:
+        tag = f"{a}__{s}__{k or 'auto'}__{mesh_tag}"
+        fp = out_dir / f"{tag}.json"
+        if fp.exists() and '"error"' not in fp.read_text()[:400]:
+            print(f"[done] {tag}", flush=True)
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", a, "--shape", s, "--json-out", str(fp)]
+        if k:
+            cmd += ["--step", k]
+        if multi_pod:
+            cmd += ["--multipod"]
+        if lower_only:
+            cmd += ["--lower-only"]
+        print(f"[cell] {tag} ...", flush=True)
+        t0 = time.time()
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout)
+            if r.returncode != 0 and not fp.exists():
+                fp.write_text(json.dumps({"arch": a, "shape": s, "mesh": mesh_tag,
+                                          "error": r.stderr[-4000:]}, indent=1))
+            status = "ok" if '"error"' not in fp.read_text()[:400] else "FAIL"
+        except subprocess.TimeoutExpired:
+            fp.write_text(json.dumps({"arch": a, "shape": s, "mesh": mesh_tag,
+                                      "error": f"timeout {timeout}s"}, indent=1))
+            status = "TIMEOUT"
+        print(f"[{status}] {tag} ({time.time()-t0:.0f}s)", flush=True)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--step", default=None,
+                    help="override step kind (train|prefill|decode|fsl)")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--lower-only", action="store_true")
+    ap.add_argument("--baseline", action="store_true",
+                    help="disable all §Perf optimizations (paper-faithful)")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override k=v (repeatable), e.g. mla_absorb=true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+
+    def _parse(v: str):
+        if v.lower() in ("true", "false"):
+            return v.lower() == "true"
+        try:
+            return int(v)
+        except ValueError:
+            try:
+                return float(v)
+            except ValueError:
+                return v
+    overrides = {k: _parse(v) for k, v in
+                 (s.split("=", 1) for s in args.set)} or None
+
+    if args.all:
+        run_all(Path(args.out), multi_pod=args.multipod,
+                lower_only=args.lower_only, timeout=args.timeout)
+        return
+    try:
+        res = dryrun_cell(args.arch, args.shape, multi_pod=args.multipod,
+                          step_kind=args.step, lower_only=args.lower_only,
+                          baseline=args.baseline, overrides=overrides,
+                          keep_hlo=bool(args.json_out) and not args.lower_only)
+    except Exception as e:
+        res = {"arch": args.arch, "shape": args.shape,
+               "mesh": "2x16x16" if args.multipod else "16x16",
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-6000:]}
+    if args.json_out:
+        Path(args.json_out).parent.mkdir(parents=True, exist_ok=True)
+        if "hlo" in res:          # persist HLO gzipped for offline re-analysis
+            import gzip
+            gz = Path(args.json_out).with_suffix(".hlo.txt.gz")
+            gz.write_bytes(gzip.compress(res.pop("hlo").encode()))
+            res["hlo_path"] = str(gz)
+        Path(args.json_out).write_text(json.dumps(res, indent=1))
+        print(json.dumps({k: res.get(k) for k in
+                          ("arch", "shape", "mesh", "compile_s", "error")}))
+    else:
+        print(json.dumps(res, indent=1))
+    if "error" in res:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

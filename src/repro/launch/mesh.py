@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Functions (never module-level constants) so importing this module never
+touches jax device state. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import (see dryrun.py); real deployments get the same shapes from actual TPU
+topologies.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    import numpy as np
+    n = int(np.prod(shape))
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+                         devices=jax.devices()[:n])
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model). Multi-pod: 2x16x16 = 512
+    chips (pod, data, model); "pod" is a second data axis by default and the
+    pipeline axis when PP is enabled (distributed/pipeline.py)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for CPU integration tests (requires host-device override)."""
+    return _mk((n_data, n_model), ("data", "model"))

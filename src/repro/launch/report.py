@@ -1,0 +1,87 @@
+"""Assemble the roofline table (EXPERIMENTS.md §Roofline) from dry-run JSONs.
+
+  PYTHONPATH=src python -m repro.launch.report results/dryrun_16x16 [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.launch import roofline as RL
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def load_cells(d: Path) -> list[dict]:
+    cells = []
+    for f in sorted(d.glob("*.json")):
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def row(cell: dict) -> dict | None:
+    if "skip" in cell:
+        return {"arch": cell["arch"], "shape": cell["shape"],
+                "skip": cell["skip"]}
+    if "error" in cell:
+        return {"arch": cell["arch"], "shape": cell["shape"],
+                "skip": "ERROR: " + cell["error"][:80]}
+    r = RL.roofline(cell)
+    hbm_gib = (cell["memory"].get("argument_bytes", 0)
+               + cell["memory"].get("output_bytes", 0)
+               + cell["memory"].get("temp_bytes", 0)) / 2 ** 30
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "step": cell["step"],
+        "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+        "collective_s": r["collective_s"], "dominant": r["dominant"],
+        "model_flops": r.get("model_flops"),
+        "useful_ratio": r.get("useful_ratio"),
+        "roofline_fraction": r.get("roofline_fraction"),
+        "hbm_gib_per_dev": hbm_gib,
+        "compile_s": cell.get("compile_s"),
+    }
+
+
+def markdown(rows: list[dict], title: str) -> str:
+    out = [f"### {title}", "",
+           "| arch | shape | step | compute | memory | collective | bound | "
+           "HBM GiB/dev | MODEL/HLO | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skip" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | SKIP | | | | | | "
+                       f"{r['skip']} |")
+            continue
+        ur = f"{r['useful_ratio']:.2f}" if r.get("useful_ratio") else "—"
+        rf = f"{r['roofline_fraction']:.2f}" if r.get("roofline_fraction") else "—"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['step']} | "
+            f"{fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+            f"{fmt_s(r['collective_s'])} | **{r['dominant']}** | "
+            f"{r['hbm_gib_per_dev']:.1f} | {ur} | {rf} |")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("dir")
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args(argv)
+    cells = load_cells(Path(args.dir))
+    rows = [r for r in (row(c) for c in cells) if r is not None]
+    if args.json:
+        print(json.dumps(rows, indent=1, default=float))
+        return
+    print(markdown(rows, f"Roofline — {args.dir}"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,333 @@
+"""Roofline terms from the dry-run (DESIGN.md §7, EXPERIMENTS.md §Roofline).
+
+Two analyzers fix a structural blind spot in ``compiled.cost_analysis()``:
+XLA's HloCostAnalysis counts a while-loop body ONCE, so a scanned-over-layers
+model (trip count = n_repeats) under-reports FLOPs/bytes/collectives by ~the
+layer count (verified: scan-of-8-matmuls reports 1 matmul of FLOPs).
+
+* :func:`jaxpr_cost` — walks the closed jaxpr recursively; ``scan`` bodies are
+  multiplied by their static ``length`` (nested scans compose), ``shard_map``
+  bodies by the mesh size (their shapes are per-device blocks). FLOPs are
+  exact for dot/conv; bytes are a fusion-aware traffic model: operands+results
+  of dot/conv/gather/scatter/(dynamic-)slice/update ops (the ops whose
+  operands must round-trip HBM) plus one read of all inputs and one write of
+  all outputs. Elementwise chains are assumed fused (XLA does).
+* :func:`collective_bytes_looped` — parses the post-SPMD compiled HLO,
+  segments it into computations, recovers each while loop's trip count from
+  its condition's comparison constant, and multiplies collective payload
+  bytes by the enclosing loop-nest multiplier.
+
+Roofline terms (TPU v5e):
+  compute    = flops_per_device / 197 TFLOP/s (bf16)
+  memory     = bytes_per_device / 819 GB/s (HBM)
+  collective = collective_bytes_per_device / 50 GB/s (ICI per-link)
+``jaxpr_cost`` counts GLOBAL work; per-device = global / n_devices (GSPMD
+partitions the annotated dims; replication waste inside shard_map is counted
+per-device, i.e. it correctly inflates the global number).
+"""
+from __future__ import annotations
+
+import re
+from functools import partial
+from typing import Any
+
+import jax
+import numpy as np
+from jax import core as jcore
+
+# --- TPU v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+
+# ===========================================================================
+# jaxpr walker
+# ===========================================================================
+
+_TRAFFIC_OPS = {
+    "dot_general", "conv_general_dilated", "gather", "scatter", "scatter-add",
+    "scatter_add", "dynamic_slice", "dynamic_update_slice",
+}
+
+
+def _aval_bytes(v) -> int:
+    aval = v.aval if hasattr(v, "aval") else v
+    if not hasattr(aval, "shape"):
+        return 0
+    return int(np.prod(aval.shape, dtype=np.int64)) * aval.dtype.itemsize
+
+
+def _dot_flops(eqn) -> int:
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    lhs, rhs = eqn.invars[0].aval.shape, eqn.invars[1].aval.shape
+    B = int(np.prod([lhs[i] for i in lb], dtype=np.int64)) if lb else 1
+    K = int(np.prod([lhs[i] for i in lc], dtype=np.int64)) if lc else 1
+    M = int(np.prod([d for i, d in enumerate(lhs) if i not in lc and i not in lb],
+                    dtype=np.int64))
+    N = int(np.prod([d for i, d in enumerate(rhs) if i not in rc and i not in rb],
+                    dtype=np.int64))
+    return 2 * B * M * N * K
+
+
+def _conv_flops(eqn) -> int:
+    out = eqn.outvars[0].aval.shape
+    rhs = eqn.invars[1].aval.shape            # (spatial..., Cin/g, Cout) varies
+    dn = eqn.params["dimension_numbers"]
+    fgc = eqn.params.get("feature_group_count", 1)
+    # reduce size = prod(kernel spatial) * C_in/groups
+    rhs_spec = dn.rhs_spec                    # (out_feat, in_feat, spatial...)
+    k_spatial = int(np.prod([rhs[i] for i in rhs_spec[2:]], dtype=np.int64))
+    c_in = rhs[rhs_spec[1]]
+    return 2 * int(np.prod(out, dtype=np.int64)) * k_spatial * c_in // max(fgc, 1)
+
+
+def _mesh_size(mesh) -> int:
+    try:
+        return int(np.prod([s for _, s in mesh.shape_tuple], dtype=np.int64))
+    except Exception:
+        try:
+            return int(mesh.size)
+        except Exception:
+            return 1
+
+
+VMEM_BUDGET = 32 * 2 ** 20   # half of v5e's 128 MB VMEM, rough residency bound
+
+
+def _walk(jaxpr, mult: float, acc: dict, nd: int) -> None:
+    """HBM-traffic rule: an operand streams from HBM if it comes from outside
+    this loop/call body (params, carry, xs — re-read every iteration) or if
+    it is a locally-produced tensor too big to stay VMEM-resident. A result
+    is written to HBM if it escapes the body (outvar) or exceeds the VMEM
+    budget. This is what makes flash-attention inner tiles free (the point of
+    blockwise attention) while weights/activations stream."""
+    local: set = set()
+    outset = set(id(v) for v in jaxpr.outvars)
+
+    def traffic(eqn):
+        name = eqn.primitive.name
+        # sliced reads/writes touch only the slice, not the whole operand:
+        if name in ("dynamic_slice", "gather"):
+            return sum(_aval_bytes(v) for v in eqn.outvars)
+        if name == "dynamic_update_slice":
+            upd = _aval_bytes(eqn.invars[1])
+            return 2 * upd          # read update + write region (in-place buf)
+        if name in ("scatter", "scatter_add", "scatter-add"):
+            upd = _aval_bytes(eqn.invars[2]) if len(eqn.invars) > 2 else 0
+            return 2 * upd
+        b = 0
+        for v in eqn.invars:
+            if not hasattr(v, "aval"):
+                continue
+            n = _aval_bytes(v)
+            if id(v) not in local or n / nd > VMEM_BUDGET:
+                b += n
+        for v in eqn.outvars:
+            n = _aval_bytes(v)
+            if id(v) in outset or n / nd > VMEM_BUDGET:
+                b += n
+        return b
+
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "scan":
+            length = eqn.params["length"]
+            _walk(eqn.params["jaxpr"].jaxpr, mult * length, acc, nd)
+        elif name == "while":
+            acc["dynamic_while"] += 1
+            _walk(eqn.params["body_jaxpr"].jaxpr, mult, acc, nd)
+        elif name == "cond":
+            for br in eqn.params["branches"]:
+                _walk(br.jaxpr, mult, acc, nd)   # upper bound: all branches
+        elif name == "shard_map":
+            m = _mesh_size(eqn.params["mesh"])
+            inner = eqn.params["jaxpr"]
+            _walk(inner.jaxpr if hasattr(inner, "jaxpr") else inner, mult * m,
+                  acc, max(nd // max(m, 1), 1))
+        elif name == "dot_general":
+            acc["flops"] += mult * _dot_flops(eqn)
+            acc["bytes"] += mult * traffic(eqn)
+        elif name == "conv_general_dilated":
+            acc["flops"] += mult * _conv_flops(eqn)
+            acc["bytes"] += mult * traffic(eqn)
+        elif name in _TRAFFIC_OPS:
+            acc["bytes"] += mult * traffic(eqn)
+        else:
+            sub = None
+            for key in ("jaxpr", "call_jaxpr"):
+                if key in eqn.params:
+                    sub = eqn.params[key]
+                    break
+            if sub is not None:
+                _walk(sub.jaxpr if hasattr(sub, "jaxpr") else sub, mult, acc, nd)
+        for v in eqn.outvars:
+            local.add(id(v))
+    # (ids stay unique during the walk: the root ClosedJaxpr keeps every
+    # sub-jaxpr and var alive)
+
+
+def jaxpr_cost(fn, args, n_devices: int = 256) -> dict:
+    """Exact global FLOPs + VMEM-aware HBM-traffic bytes for fn(*args)."""
+    closed = jax.make_jaxpr(fn)(*args)
+    acc = {"flops": 0.0, "bytes": 0.0, "dynamic_while": 0}
+    _walk(closed.jaxpr, 1.0, acc, max(n_devices, 1))
+    io_bytes = (sum(_aval_bytes(v) for v in closed.jaxpr.invars)
+                + sum(_aval_bytes(v) for v in closed.jaxpr.outvars))
+    return {"flops": float(acc["flops"]),
+            "traffic_bytes": float(acc["bytes"] + io_bytes),
+            "io_bytes": float(io_bytes),
+            "dynamic_while": acc["dynamic_while"]}
+
+
+# ===========================================================================
+# HLO collective parser with loop multipliers
+# ===========================================================================
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+(" + "|".join(_COLLECTIVES)
+    + r")[-a-z]*\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+
+def _split_computations(hlo: str) -> dict:
+    comps, cur, buf = {}, None, []
+    for line in hlo.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            cur = m.group(1)
+            buf = [line]
+        elif cur is not None:
+            buf.append(line)
+            if line.strip() == "}":
+                comps[cur] = "\n".join(buf)
+                cur = None
+    return comps
+
+
+def _direct_collectives(text: str) -> dict:
+    out = {k: 0 for k in _COLLECTIVES}
+    cnt = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(text):
+        dt, dims, kind = m.groups()
+        sz = _DTYPE_BYTES.get(dt)
+        if sz is None:
+            continue
+        n = 1
+        for d in (dims.split(",") if dims else []):
+            n *= int(d)
+        out[kind] += n * sz
+        cnt[kind] += 1
+    return {"bytes": out, "counts": cnt}
+
+
+def collective_bytes_looped(hlo: str) -> dict:
+    comps = _split_computations(hlo)
+    # map: body computation -> (host computation, trip count)
+    whiles = []
+    for host, text in comps.items():
+        for m in _WHILE_RE.finditer(text):
+            cond, body = m.group(1), m.group(2)
+            consts = [int(c) for c in _CONST_RE.findall(comps.get(cond, ""))]
+            trip = max(consts) if consts else 1
+            whiles.append((host, body, trip))
+    mult = {name: 1.0 for name in comps}
+    # propagate: body multiplier = host multiplier * trip (iterate to fixpoint
+    # to handle nesting; while graphs are acyclic so <= depth iterations)
+    for _ in range(8):
+        changed = False
+        for host, body, trip in whiles:
+            want = mult.get(host, 1.0) * trip
+            if body in mult and mult[body] != want:
+                mult[body] = want
+                changed = True
+        if not changed:
+            break
+
+    total = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    static = {k: 0 for k in _COLLECTIVES}
+    for name, text in comps.items():
+        d = _direct_collectives(text)
+        for k in _COLLECTIVES:
+            total[k] += d["bytes"][k] * mult.get(name, 1.0)
+            counts[k] += d["counts"][k]
+            static[k] += d["bytes"][k]
+    return {"bytes": {k: int(v) for k, v in total.items()},
+            "counts": counts,
+            "static_bytes": static,
+            "loops": [(h, b, t) for h, b, t in whiles if t > 1],
+            "total_bytes": int(sum(total.values()))}
+
+
+# ===========================================================================
+# roofline assembly
+# ===========================================================================
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """MODEL_FLOPS = 6·N·D (train; N = active params, D = tokens) or
+    2·N·B per decoded token (serve)."""
+    from repro import configs
+    from repro.configs.base import SHAPES
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = active_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.seq_len * shape.global_batch
+    return 2.0 * n_active * shape.global_batch          # decode: one token
+
+
+def active_params(cfg) -> float:
+    """Parameter count with MoE counted at top_k (+shared) of routed experts."""
+    from repro.launch import specs as S
+    tree = S.param_shapes(cfg)
+    total = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        n = float(np.prod(leaf.shape, dtype=np.int64))
+        keys = tuple(getattr(k, "key", str(k)) for k in path)
+        if cfg.n_experts and any(k in ("w_gate", "w_up", "w_down") for k in keys) \
+                and "shared" not in keys and len(leaf.shape) >= 3 \
+                and leaf.shape[-3] == cfg.n_experts:
+            n = n / cfg.n_experts * cfg.top_k
+        total += n
+    return total
+
+
+def roofline(cell: dict, *, n_devices: int | None = None) -> dict:
+    nd = n_devices or cell["n_devices"]
+    jx = cell["jaxpr"]
+    flops_dev = jx["flops"] / nd
+    bytes_dev = jx["traffic_bytes"] / nd
+    coll_dev = cell["collectives"]["total_bytes"]      # per-device (SPMD module)
+    t_c = flops_dev / PEAK_FLOPS
+    t_m = bytes_dev / HBM_BW
+    t_x = coll_dev / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    mf = model_flops(cell["arch"], cell["shape"]) if cell.get("step") in (
+        "train", "prefill", "decode") else None
+    out = {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom[1],
+        "bound_s": dom[0],
+        "flops_per_device": flops_dev, "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+    }
+    if mf is not None:
+        out["model_flops"] = mf
+        out["useful_ratio"] = mf / max(jx["flops"], 1.0)
+        # roofline fraction: model-flops time at peak vs the bound term
+        out["roofline_fraction"] = (mf / nd / PEAK_FLOPS) / max(dom[0], 1e-12)
+    return out

@@ -1,0 +1,49 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell — the
+dry-run's weak-type-correct, shardable, zero-allocation inputs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.nn import transformer as T
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Model inputs for the step this shape lowers (train/prefill -> full seq;
+    decode -> one token + pos; caches are produced by cache_specs)."""
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind != "decode" else 1
+    b: dict = {}
+    if cfg.family == "audio":
+        b["embeds"] = SDS((B, S, cfg.d_frontend), jnp.dtype(cfg.compute_dtype))
+    else:
+        b["tokens"] = SDS((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        b["vision"] = SDS((B, cfg.n_image_tokens, cfg.d_vision),
+                          jnp.dtype(cfg.compute_dtype))
+    if shape.kind == "train":
+        b["labels"] = SDS((B, S), jnp.int32)
+    if shape.kind == "decode":
+        b["pos"] = SDS((), jnp.int32)
+    return b
+
+
+def fsl_batch_specs(cfg: ModelConfig, shape: ShapeConfig, n_classes: int = 32) -> dict:
+    """Inputs for the paper's single-pass FSL train step on an LM backbone:
+    support tokens + integer class labels + running class-HV banks."""
+    b = input_specs(cfg, shape)
+    b.pop("labels", None)
+    b["class_labels"] = SDS((shape.global_batch,), jnp.int32)
+    return b
+
+
+def param_shapes(cfg: ModelConfig):
+    """Abstract param tree via eval_shape (no allocation)."""
+    return jax.eval_shape(lambda k: T.init(k, cfg), jax.random.key(0))
+
+
+def cache_shapes(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len))

@@ -1,0 +1,139 @@
+"""Step functions: train / prefill / decode (serve) / FSL-HDnn single-pass
+train — the four things a cell can lower. Distribution is injected via
+``Dist`` (sharding constraints + shard_map MoE); passing ``dist=None`` gives
+the single-device path used by CPU tests.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core.hdc import encoding
+from repro.nn import transformer as T
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+
+
+def _wires(cfg, dist):
+    shd = dist.shd if dist is not None else (lambda tag, x: x)
+    moe_fn = (dist.moe_fn() if (dist is not None and cfg.n_experts
+                                and not dist.dp_only) else None)
+    shd_p = (dist.unit_param_constrainer()
+             if (dist is not None and cfg.opt_scan_param_constraint) else None)
+    return shd, moe_fn, shd_p
+
+
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, run: RunConfig, dist=None,
+                    grad_transform=None):
+    """``grad_transform(grads, aux_state) -> (grads, aux_state)`` hooks in
+    gradient compression (int8 error-feedback, distributed/compression.py);
+    when given, the step signature gains an ``ef`` arg and return."""
+    shd, moe_fn, shd_p = _wires(cfg, dist)
+
+    def train_step(params, opt, batch):
+        def loss_fn(p):
+            return T.lm_loss(p, cfg, batch, shd=shd, moe_fn=moe_fn, shd_p=shd_p)
+
+        (loss, nll), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
+        params, opt = adamw_update(grads, opt, params, run)
+        return params, opt, {"loss": loss, "nll": nll, "gnorm": gnorm}
+
+    if grad_transform is None:
+        return train_step
+
+    def train_step_ef(params, opt, batch, ef):
+        def loss_fn(p):
+            return T.lm_loss(p, cfg, batch, shd=shd, moe_fn=moe_fn, shd_p=shd_p)
+
+        (loss, nll), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads, ef = grad_transform(grads, ef)
+        grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
+        params, opt = adamw_update(grads, opt, params, run)
+        return params, opt, ef, {"loss": loss, "nll": nll, "gnorm": gnorm}
+
+    return train_step_ef
+
+
+def make_prefill_step(cfg: ModelConfig, dist=None):
+    shd, moe_fn, shd_p = _wires(cfg, dist)
+
+    def prefill_step(params, batch):
+        out = T.forward(params, cfg, batch, mode="prefill", shd=shd, moe_fn=moe_fn,
+                        collect_branches=False, shd_p=shd_p)
+        logits = T.logits_from_hidden(params, cfg, out["hidden"][:, -1:], shd)
+        return logits[:, 0]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, dist=None):
+    shd, moe_fn, shd_p = _wires(cfg, dist)
+
+    def serve_step(params, caches, batch):
+        out = T.forward(params, cfg, batch, mode="decode", caches=caches,
+                        pos=batch["pos"], shd=shd, moe_fn=moe_fn,
+                        collect_branches=False, shd_p=shd_p)
+        logits = T.logits_from_hidden(params, cfg, out["hidden"], shd)
+        return logits[:, 0], out["caches"]
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# The paper's step: gradient-free single-pass FSL training on a frozen backbone
+# ---------------------------------------------------------------------------
+
+def init_class_hvs(cfg: ModelConfig, n_classes: int):
+    _, _, repeats, _ = cfg.layout()
+    return {
+        "final": jnp.zeros((n_classes, cfg.hdc_dim), jnp.float32),
+        "branches": jnp.zeros((repeats, n_classes, cfg.hdc_dim), jnp.float32),
+    }
+
+
+def make_fsl_train_step(cfg: ModelConfig, n_classes: int, dist=None):
+    """Single pass: frozen forward -> pooled features (+ per-group branch taps)
+    -> cRP encode -> class-HV aggregation (Eq. 4). No gradients anywhere."""
+    shd, moe_fn, shd_p = _wires(cfg, dist)
+
+    def encode(f):  # (B, F) -> (B, D), binary sample HVs
+        h = encoding.crp_encode(f, cfg.hdc_seed, cfg.hdc_dim, impl="hash",
+                                block=cfg.hdc_block)
+        return jnp.where(h >= 0, 1.0, -1.0)
+
+    def fsl_train_step(params, class_hvs, batch):
+        out = T.forward(jax.lax.stop_gradient(params), cfg, batch, mode="train",
+                        shd=shd, moe_fn=moe_fn, collect_branches=True, shd_p=shd_p)
+        final_feat = jnp.mean(out["hidden"].astype(jnp.float32), axis=1)  # (B, d)
+        labels = batch["class_labels"]
+        hv = jax.ops.segment_sum(encode(final_feat), labels, num_segments=n_classes)
+        new = {"final": class_hvs["final"] + hv}
+        br = jax.vmap(lambda f: jax.ops.segment_sum(encode(f), labels,
+                                                    num_segments=n_classes))(out["branches"])
+        new["branches"] = class_hvs["branches"] + br
+        return new
+
+    return fsl_train_step
+
+
+def make_fsl_predict_step(cfg: ModelConfig, dist=None):
+    shd, moe_fn, shd_p = _wires(cfg, dist)
+
+    def predict(params, class_hvs, batch):
+        out = T.forward(params, cfg, batch, mode="train", shd=shd, moe_fn=moe_fn,
+                        collect_branches=False, shd_p=shd_p)
+        f = jnp.mean(out["hidden"].astype(jnp.float32), axis=1)
+        h = encoding.crp_encode(f, cfg.hdc_seed, cfg.hdc_dim, impl="hash",
+                                block=cfg.hdc_block)
+        q = jnp.where(h >= 0, 1.0, -1.0)
+        c = class_hvs["final"]
+        cn = c / jnp.maximum(jnp.abs(c).mean(-1, keepdims=True), 1e-6)
+        d = jnp.abs(q[:, None] - cn[None]).sum(-1)
+        return jnp.argmin(d, axis=-1)
+
+    return predict

@@ -1,0 +1,2 @@
+"""Model substrate: functional modules, backbone layers, generic multi-family
+transformer (scan-over-layer-groups), ResNet-18 feature extractor."""

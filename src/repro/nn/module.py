@@ -1,0 +1,111 @@
+"""Minimal functional module substrate.
+
+Parameters are nested dicts (pytrees) of jnp arrays; every layer is a pair of
+pure functions ``init(key, ...) -> params`` and ``apply(params, x, ...) -> y``.
+No framework dependency (flax/haiku unavailable offline); this keeps pjit
+sharding rules simple: PartitionSpecs are matched against param-tree paths.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any  # nested dict pytree of arrays
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, *, bias: bool = False,
+               scale: float | None = None) -> Params:
+    """Lecun-normal dense kernel, stored as ``(d_in, d_out)``."""
+    std = scale if scale is not None else 1.0 / math.sqrt(max(d_in, 1))
+    p = {"kernel": (jax.random.normal(key, (d_in, d_out)) * std).astype(dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["kernel"].astype(x.dtype)
+    if "bias" in p:
+        y = y + p["bias"].astype(x.dtype)
+    return y
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"embedding": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed_apply(p: Params, tokens: jnp.ndarray, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    return jnp.take(p["embedding"], tokens, axis=0).astype(compute_dtype)
+
+
+def conv2d_init(key, k: int, c_in: int, c_out: int, dtype=jnp.float32) -> Params:
+    fan_in = k * k * c_in
+    std = math.sqrt(2.0 / fan_in)
+    return {"kernel": (jax.random.normal(key, (k, k, c_in, c_out)) * std).astype(dtype)}
+
+
+def conv2d_apply(p: Params, x: jnp.ndarray, *, stride: int = 1, padding: str = "SAME") -> jnp.ndarray:
+    return jax.lax.conv_general_dilated(
+        x, p["kernel"].astype(x.dtype), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.zeros((d,), dtype)}  # (1 + scale) parametrization
+
+
+def rmsnorm_apply(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# tree utilities
+# ---------------------------------------------------------------------------
+
+def param_count(params: Params) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(params)))
+
+
+def param_bytes(params: Params) -> int:
+    return int(sum(np.prod(l.shape) * l.dtype.itemsize for l in jax.tree.leaves(params)))
+
+
+def tree_stack(trees: list[Params]) -> Params:
+    """Stack a list of identically-structured pytrees along a new axis 0."""
+    return jax.tree.map(lambda *ls: jnp.stack(ls, axis=0), *trees)
+
+
+def tree_index(tree: Params, i) -> Params:
+    """Index leading axis of every leaf (works with traced ``i``)."""
+    return jax.tree.map(lambda l: jax.lax.dynamic_index_in_dim(l, i, 0, keepdims=False), tree)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

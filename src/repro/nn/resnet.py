@@ -1,0 +1,112 @@
+"""ResNet-18 feature extractor — the paper's own backbone (§VI-B).
+
+Four stages x two basic blocks (4 conv layers per stage = the paper's "CONV
+block", Fig. 11). Branch features = global-average-pool of each stage output
+(dims 64/128/256/512 at width 1.0) feed the early-exit HDC heads. The
+clustered variant stores every 3x3 conv as (indices, codebook) per
+``ch_sub``-channel group (§III-A) and applies via decompress-then-MXU.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import module as nn
+from repro.core.clustering import layers as cl
+
+Params = Any
+
+STAGE_WIDTHS = (64, 128, 256, 512)
+
+
+def init(key, *, in_ch: int = 3, width_mult: float = 1.0, dtype=jnp.float32) -> Params:
+    widths = [max(8, int(w * width_mult)) for w in STAGE_WIDTHS]
+    ks = iter(nn.split_keys(key, 64))
+    p: dict[str, Any] = {"stem": nn.conv2d_init(next(ks), 3, in_ch, widths[0], dtype)}
+    c_in = widths[0]
+    for s, w in enumerate(widths):
+        stage = {}
+        for b in range(2):
+            blk = {
+                "conv1": nn.conv2d_init(next(ks), 3, c_in if b == 0 else w, w, dtype),
+                "bn1": nn.layernorm_init(w, dtype),
+                "conv2": nn.conv2d_init(next(ks), 3, w, w, dtype),
+                "bn2": nn.layernorm_init(w, dtype),
+            }
+            if b == 0 and c_in != w:
+                blk["proj"] = nn.conv2d_init(next(ks), 1, c_in, w, dtype)
+            stage[str(b)] = blk
+        p[f"stage{s}"] = stage
+        c_in = w
+    p["widths"] = jnp.asarray(widths)  # static metadata carried in tree
+    return p
+
+
+def _conv(pc, x, stride=1):
+    if "idx" in pc:  # clustered weight
+        return cl.clustered_conv2d(pc, x, stride=stride)
+    return nn.conv2d_apply(pc, x, stride=stride)
+
+
+def _basic_block(p, x, stride):
+    h = _conv(p["conv1"], x, stride)
+    h = jax.nn.relu(nn.layernorm_apply(p["bn1"], h))
+    h = _conv(p["conv2"], h, 1)
+    h = nn.layernorm_apply(p["bn2"], h)
+    sc = x
+    if "proj" in p:
+        sc = nn.conv2d_apply(p["proj"], x, stride=stride)
+    elif stride != 1:
+        sc = x[:, ::stride, ::stride]
+    return jax.nn.relu(h + sc)
+
+
+def forward(p: Params, x: jnp.ndarray):
+    """x: (B, H, W, 3) -> (final_feat (B, 512w), branches [4 x (B, w_s)])."""
+    h = jax.nn.relu(_conv(p["stem"], x))
+    branches = []
+    for s in range(4):
+        stride = 1 if s == 0 else 2
+        h = _basic_block(p[f"stage{s}"]["0"], h, stride)
+        h = _basic_block(p[f"stage{s}"]["1"], h, 1)
+        branches.append(jnp.mean(h, axis=(1, 2)))      # AFU avg-pool branch tap
+    return branches[-1], branches
+
+
+def cluster_params(p: Params, *, bits: int = 4, ch_sub: int = 64) -> Params:
+    """Cluster every 3x3 conv kernel (stem & blocks) -> clustered param tree."""
+    def maybe(pc):
+        k = pc["kernel"]
+        if k.ndim == 4 and k.shape[0] == 3:                 # 3x3 convs only
+            return cl.cluster_weight(k, bits=bits, ch_sub=min(ch_sub, k.shape[2]),
+                                     in_axis=2)
+        return pc
+
+    out = {"stem": maybe(p["stem"]), "widths": p["widths"]}
+    for s in range(4):
+        stage = {}
+        for b in ("0", "1"):
+            blk = dict(p[f"stage{s}"][b])
+            blk["conv1"] = maybe(blk["conv1"])
+            blk["conv2"] = maybe(blk["conv2"])
+            stage[b] = blk
+        out[f"stage{s}"] = stage
+    return out
+
+
+def flops_per_image(p: Params, img: int) -> int:
+    """Approximate dense conv FLOPs for one image (for Eq. 1/2/6 cost model)."""
+    total, res, c_in = 0, img, None
+    widths = [int(w) for w in jax.device_get(p["widths"])]
+    total += 2 * 3 * 3 * 3 * widths[0] * img * img
+    c_in = widths[0]
+    for s, w in enumerate(widths):
+        if s > 0:
+            res //= 2
+        for b in range(2):
+            cin = c_in if b == 0 else w
+            total += 2 * (3 * 3 * cin * w + 3 * 3 * w * w) * res * res
+        c_in = w
+    return int(total)

@@ -1,0 +1,293 @@
+"""Generic multi-family backbone.
+
+A model is: embedding (or modality in-projection stub) -> [head blocks] ->
+scan over ``n_repeats`` copies of the periodic layer unit -> [tail blocks] ->
+final norm -> LM head. Each block = pre-norm mixer + pre-norm MLP.
+
+Scan-over-layer-groups keeps HLO size O(unit) instead of O(n_layers), which is
+what makes 100-layer x 512-device compiles tractable. Branch features (one per
+unit repeat, mean-pooled) are collected as scan outputs — these feed the
+FSL-HDnn early-exit HDC heads (paper §V-A).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn import module as nn
+from repro.nn import layers as L
+
+Params = Any
+Shd = Callable[[str, jnp.ndarray], jnp.ndarray]
+
+
+def _noshd(tag: str, x: jnp.ndarray) -> jnp.ndarray:
+    return x
+
+
+_MIXER_INIT = {
+    "attn": L.attn_init, "local": L.attn_init, "mla": L.mla_init,
+    "rglru": L.rglru_init, "mlstm": L.mlstm_init, "slstm": L.slstm_init,
+    "xattn": L.xattn_init,
+}
+
+_MIXER_CACHE = {
+    "attn": lambda cfg, b, s: L.attn_cache_init(cfg, b, s, local=False),
+    "local": lambda cfg, b, s: L.attn_cache_init(cfg, b, s, local=True),
+    "mla": L.mla_cache_init,
+    "rglru": L.rglru_cache_init,
+    "mlstm": L.mlstm_cache_init,
+    "slstm": L.slstm_cache_init,
+    "xattn": lambda cfg, b, s: {},
+}
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _norm_init(cfg: ModelConfig):
+    return (nn.rmsnorm_init if cfg.norm_kind == "rmsnorm" else nn.layernorm_init)(
+        cfg.d_model, cfg.pdtype)
+
+
+def _norm_apply(cfg: ModelConfig, p, x):
+    if cfg.norm_kind == "rmsnorm":
+        return nn.rmsnorm_apply(p, x, cfg.norm_eps)
+    return nn.layernorm_apply(p, x, cfg.norm_eps)
+
+
+def block_init(key, cfg: ModelConfig, mixer: str, mlp: str, *, d_ff: int | None = None) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": _norm_init(cfg), "mixer": _MIXER_INIT[mixer](k1, cfg)}
+    if mlp != "none":
+        p["norm2"] = _norm_init(cfg)
+        p["mlp"] = L.mlp_init(k2, cfg, mlp, d_ff)
+        if mixer == "xattn":
+            p["mlp_gate"] = jnp.zeros((), cfg.pdtype)
+    return p
+
+
+def block_apply(p: Params, cfg: ModelConfig, mixer: str, mlp: str, x, *,
+                mode: str, cache=None, pos=None, vision=None, shd: Shd = _noshd,
+                moe_fn=None):
+    """-> (x, new_cache, aux)."""
+    h = _norm_apply(cfg, p["norm1"], x)
+    if mixer in ("attn", "local"):
+        y, new_cache = L.attn_apply(p["mixer"], cfg, h, local=(mixer == "local"),
+                                    mode=mode, cache=cache, pos=pos, shd=shd)
+    elif mixer == "mla":
+        y, new_cache = L.mla_apply(p["mixer"], cfg, h, mode=mode, cache=cache,
+                                   pos=pos, shd=shd)
+    elif mixer == "rglru":
+        y, new_cache = L.rglru_apply(p["mixer"], cfg, h, mode=mode, cache=cache, pos=pos)
+    elif mixer == "mlstm":
+        y, new_cache = L.mlstm_apply(p["mixer"], cfg, h, mode=mode, cache=cache, pos=pos)
+    elif mixer == "slstm":
+        y, new_cache = L.slstm_apply(p["mixer"], cfg, h, mode=mode, cache=cache,
+                                     pos=pos, shd=shd)
+    elif mixer == "xattn":
+        kv = L.xattn_kv(p["mixer"], cfg, vision)
+        y = L.xattn_apply(p["mixer"], cfg, h, kv, shd=shd)
+        new_cache = {}
+    else:
+        raise ValueError(mixer)
+    x = shd("act", x + y)
+
+    aux = jnp.zeros((), jnp.float32)
+    if mlp != "none":
+        h = _norm_apply(cfg, p["norm2"], x)
+        if mlp == "moe" and moe_fn is not None:
+            y, aux = moe_fn(p["mlp"], cfg, h)
+        else:
+            y, aux = L.mlp_apply(p["mlp"], cfg, mlp, h)
+        if mixer == "xattn":  # gated residual on cross-attn layers (llama-vision)
+            y = jnp.tanh(p["mlp_gate"].astype(jnp.float32)).astype(y.dtype) * y
+        x = shd("act", x + y)
+        aux = jnp.asarray(aux, jnp.float32)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# whole-model init
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: ModelConfig) -> Params:
+    head, unit, repeats, tail = cfg.layout()
+    n_keys = 4 + len(head) + len(tail) + repeats * len(unit)
+    ks = iter(nn.split_keys(key, n_keys))
+    p: dict[str, Any] = {}
+    if cfg.family == "audio":
+        p["in_proj"] = nn.dense_init(next(ks), cfg.d_frontend, cfg.d_model, cfg.pdtype, bias=True)
+    else:
+        p["embed"] = nn.embed_init(next(ks), cfg.padded_vocab, cfg.d_model, cfg.pdtype)
+    if cfg.family == "vlm":
+        p["vision_proj"] = nn.dense_init(next(ks), cfg.d_vision, cfg.d_model, cfg.pdtype, bias=True)
+
+    def dff_for(i, mlp):  # head layers may use a different dense d_ff (deepseek)
+        if mlp != "moe" and cfg.dense_d_ff and i < cfg.head_layers:
+            return cfg.dense_d_ff
+        return None
+
+    p["head_blocks"] = {str(i): block_init(next(ks), cfg, m, f, d_ff=dff_for(i, f))
+                        for i, (m, f) in enumerate(head)}
+    # unit params: for each position in unit, stack params across repeats
+    unit_params = {}
+    for pos_u, (m, f) in enumerate(unit):
+        per_rep = [block_init(next(ks), cfg, m, f) for _ in range(repeats)]
+        unit_params[str(pos_u)] = nn.tree_stack(per_rep)
+    p["unit_blocks"] = unit_params
+    p["tail_blocks"] = {str(i): block_init(next(ks), cfg, m, f)
+                        for i, (m, f) in enumerate(tail)}
+    p["final_norm"] = _norm_init(cfg)
+    if cfg.family == "audio" or not cfg.tie_embeddings:
+        p["lm_head"] = nn.dense_init(next(ks), cfg.d_model, cfg.padded_vocab, cfg.pdtype)
+    return p
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int) -> Params:
+    head, unit, repeats, tail = cfg.layout()
+
+    def one(kind):
+        return _MIXER_CACHE[kind](cfg, batch, seq)
+
+    def stack_r(c):
+        # broadcast the per-layer init values (NOT zeros: slot_pos inits to -1,
+        # mLSTM stabilizer m inits to -inf) across the repeat dimension
+        return jax.tree.map(lambda l: jnp.broadcast_to(l[None], (repeats,) + l.shape), c)
+
+    return {
+        "head": {str(i): one(m) for i, (m, _) in enumerate(head)},
+        "unit": {str(i): stack_r(one(m)) for i, (m, _) in enumerate(unit)},
+        "tail": {str(i): one(m) for i, (m, _) in enumerate(tail)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _pool(x: jnp.ndarray) -> jnp.ndarray:
+    """Mean-pool sequence -> (B, d) branch feature (fp32)."""
+    return jnp.mean(x.astype(jnp.float32), axis=1)
+
+
+def embed_inputs(params: Params, cfg: ModelConfig, batch: dict, shd: Shd = _noshd):
+    if cfg.family == "audio":
+        x = nn.dense_apply(params["in_proj"], batch["embeds"].astype(cfg.cdtype))
+    else:
+        x = nn.embed_apply(params["embed"], batch["tokens"], cfg.cdtype)
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), cfg.cdtype)  # gemma-style scale
+    vision = None
+    if cfg.family == "vlm":
+        vision = nn.dense_apply(params["vision_proj"], batch["vision"].astype(cfg.cdtype))
+    return shd("act", x), vision
+
+
+def apply_unit(unit_params_i: Params, cfg: ModelConfig, x, *, mode: str,
+               cache_i=None, pos=None, vision=None, shd: Shd = _noshd, moe_fn=None):
+    """Apply one repeat of the layer unit. ``unit_params_i``/``cache_i`` are the
+    per-repeat slices {pos: params}. -> (x, new_cache_i, aux, branch_feat)."""
+    _, unit, _, _ = cfg.layout()
+    new_cache, aux = {}, jnp.zeros((), jnp.float32)
+    for pos_u, (m, f) in enumerate(unit):
+        c = cache_i.get(str(pos_u)) if cache_i is not None else None
+        x, nc, a = block_apply(unit_params_i[str(pos_u)], cfg, m, f, x, mode=mode,
+                               cache=c, pos=pos, vision=vision, shd=shd, moe_fn=moe_fn)
+        aux = aux + a
+        new_cache[str(pos_u)] = nc if nc is not None else {}
+    return x, new_cache, aux, _pool(x)
+
+
+def forward(params: Params, cfg: ModelConfig, batch: dict, *, mode: str,
+            caches: Params | None = None, pos=None, shd: Shd = _noshd,
+            moe_fn=None, collect_branches: bool = True, shd_p=None):
+    """-> dict(hidden, branches (R,B,d) fp32, aux, caches). ``shd_p``
+    re-constrains the per-iteration param slice to its sharded spec inside
+    the scan body (perf-6; see Dist.unit_param_constrainer)."""
+    head, unit, repeats, tail = cfg.layout()
+    x, vision = embed_inputs(params, cfg, batch, shd)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {"head": {}, "unit": {}, "tail": {}}
+
+    for i, (m, f) in enumerate(head):
+        c = caches["head"][str(i)] if caches is not None else None
+        x, nc, a = block_apply(params["head_blocks"][str(i)], cfg, m, f, x, mode=mode,
+                               cache=c, pos=pos, vision=vision, shd=shd, moe_fn=moe_fn)
+        aux_total += a
+        new_caches["head"][str(i)] = nc if nc is not None else {}
+
+    # --- scanned periodic region ---
+    def body(carry, xs):
+        xc, auxc = carry
+        up_i, cache_i = xs
+        if shd_p is not None:
+            up_i = shd_p(up_i)
+        xc, nc, a, branch = apply_unit(up_i, cfg, xc, mode=mode, cache_i=cache_i,
+                                       pos=pos, vision=vision, shd=shd, moe_fn=moe_fn)
+        return (xc, auxc + a), (nc, branch)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    if repeats > 0:
+        cache_xs = caches["unit"] if caches is not None else {
+            str(i): {} for i in range(len(unit))}
+        (x, aux_total), (new_unit_caches, branches) = jax.lax.scan(
+            body, (x, aux_total), (params["unit_blocks"], cache_xs))
+        new_caches["unit"] = new_unit_caches
+    else:
+        branches = jnp.zeros((0, x.shape[0], cfg.d_model), jnp.float32)
+
+    for i, (m, f) in enumerate(tail):
+        c = caches["tail"][str(i)] if caches is not None else None
+        x, nc, a = block_apply(params["tail_blocks"][str(i)], cfg, m, f, x, mode=mode,
+                               cache=c, pos=pos, vision=vision, shd=shd, moe_fn=moe_fn)
+        aux_total += a
+        new_caches["tail"][str(i)] = nc if nc is not None else {}
+
+    x = _norm_apply(cfg, params["final_norm"], x)
+    return {
+        "hidden": x,
+        "branches": branches if collect_branches else None,
+        "aux": aux_total,
+        "caches": new_caches if mode == "decode" else None,
+    }
+
+
+def logits_from_hidden(params: Params, cfg: ModelConfig, hidden, shd: Shd = _noshd):
+    if cfg.tie_embeddings and "embed" in params:
+        w = params["embed"]["embedding"].astype(hidden.dtype)
+        return shd("logits", hidden @ w.T)
+    return shd("logits", nn.dense_apply(params["lm_head"], hidden))
+
+
+# ---------------------------------------------------------------------------
+# losses / steps (model-level; distribution wiring lives in launch/)
+# ---------------------------------------------------------------------------
+
+def lm_loss(params: Params, cfg: ModelConfig, batch: dict, *, shd: Shd = _noshd,
+            moe_fn=None, shd_p=None):
+    out = forward(params, cfg, batch, mode="train", shd=shd, moe_fn=moe_fn,
+                  collect_branches=False, shd_p=shd_p)
+    logits = logits_from_hidden(params, cfg, out["hidden"], shd)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:   # mask pad region (never a label)
+        pad_bias = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size, 0.0, -1e30)
+        lf = lf + pad_bias
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    if cfg.opt_fused_loss:
+        # perf-2: fused select-reduce over the (vocab-sharded) last dim — the
+        # compare+where+sum fuses into one sharded reduction; take_along_axis
+        # over a sharded dim would all-gather the full logits tensor.
+        vocab_ids = jnp.arange(cfg.padded_vocab)
+        gold = jnp.sum(jnp.where(labels[..., None] == vocab_ids, lf, 0.0), axis=-1)
+    else:
+        gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = jnp.sum((lse - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+    return nll + out["aux"], nll

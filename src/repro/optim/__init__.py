@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (adamw_init, adamw_update, sgdm_init,
+                                    sgdm_update, clip_by_global_norm,
+                                    cosine_warmup, make_optimizer)

@@ -1,0 +1,97 @@
+"""In-house optimizers (optax is not available offline): AdamW and
+SGD-momentum, with global-norm clipping and cosine-warmup schedule.
+
+Optimizer state is a pytree mirroring params (m/v in fp32), so the same
+PartitionSpec rules shard it ZeRO-style.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+
+Params = Any
+
+
+def cosine_warmup(run: RunConfig) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = run.learning_rate * step / max(run.warmup_steps, 1)
+        t = jnp.clip((step - run.warmup_steps) / max(run.steps - run.warmup_steps, 1), 0, 1)
+        cos = 0.1 * run.learning_rate + 0.9 * run.learning_rate * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < run.warmup_steps, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads: Params, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+# --- AdamW -------------------------------------------------------------------
+
+def adamw_init(params: Params) -> Params:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads: Params, opt: Params, params: Params, run: RunConfig,
+                 lr_fn=None) -> tuple[Params, Params]:
+    step = opt["step"] + 1
+    lr = (lr_fn or cosine_warmup(run))(step)
+    b1, b2, eps = run.b1, run.b2, 1e-8
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * gf * gf
+        mh = m / (1 - b1 ** step.astype(jnp.float32))
+        vh = v / (1 - b2 ** step.astype(jnp.float32))
+        delta = mh / (jnp.sqrt(vh) + eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + run.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, opt["m"], opt["v"], params)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+# --- SGD momentum --------------------------------------------------------------
+
+def sgdm_init(params: Params) -> Params:
+    return {"mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def sgdm_update(grads: Params, opt: Params, params: Params, run: RunConfig,
+                momentum: float = 0.9, lr_fn=None) -> tuple[Params, Params]:
+    step = opt["step"] + 1
+    lr = (lr_fn or cosine_warmup(run))(step)
+
+    def upd(g, mu, p):
+        mu = momentum * mu + g.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * mu).astype(p.dtype), mu
+
+    out = jax.tree.map(upd, grads, opt["mu"], params)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"mu": new_mu, "step": step}
+
+
+def make_optimizer(kind: str):
+    if kind == "adamw":
+        return adamw_init, adamw_update
+    if kind == "sgdm":
+        return sgdm_init, sgdm_update
+    raise ValueError(kind)

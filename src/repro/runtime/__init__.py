@@ -1,0 +1,2 @@
+"""Runtime: fault-tolerant supervisor, failure injection, elastic rescale."""
+from repro.runtime.supervisor import Supervisor, FailureInjector, StepFailure

@@ -1,0 +1,121 @@
+"""Fault-tolerant training supervisor.
+
+Wraps the step loop with checkpoint/restart semantics:
+
+* every ``checkpoint_every`` steps the full state (params, opt, data-iterator
+  state, RNG) is saved through :class:`repro.checkpoint.CheckpointManager`
+  (atomic + async + keep-k);
+* a step failure (node crash, injected fault, NaN loss if ``nan_is_failure``)
+  triggers restore-from-latest and resume — the loop re-executes from the
+  last checkpoint boundary exactly (the data stream is seeded by step, so
+  replayed batches are bit-identical);
+* restarts are bounded by ``max_restarts`` to avoid crash loops;
+* on restore the state is device_put against the *current* mesh sharding
+  (elastic rescale: a checkpoint from a different device count restores
+  cleanly — tested 8 -> 4 -> 8 host devices in tests/test_runtime.py).
+
+At 1000+ node scale the same loop runs per-controller; detection is the
+runtime's (jax.distributed heartbeats), reaction is this supervisor.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+
+
+class StepFailure(RuntimeError):
+    """A step-level failure (simulates node loss / collective timeout)."""
+
+
+@dataclass
+class FailureInjector:
+    """Deterministically fail at given steps (testing / chaos drills)."""
+    fail_at: tuple[int, ...] = ()
+    _fired: set = field(default_factory=set)
+
+    def check(self, step: int) -> None:
+        if step in self.fail_at and step not in self._fired:
+            self._fired.add(step)
+            raise StepFailure(f"injected failure at step {step}")
+
+
+@dataclass
+class Supervisor:
+    step_fn: Callable                  # (state, batch) -> (state, metrics)
+    init_state: Any                    # dict with "params", "opt", ...
+    data: Any                          # iterator with state_dict/load_state_dict
+    ckpt: CheckpointManager
+    checkpoint_every: int = 50
+    max_restarts: int = 8
+    nan_is_failure: bool = True
+    injector: FailureInjector | None = None
+    state_shardings: dict | None = None
+    log_every: int = 0
+
+    def run(self, n_steps: int) -> dict:
+        state = self.init_state
+        step = 0
+        restarts = 0
+        history: list[dict] = []
+        self._data_state0 = self.data.state_dict()   # cold-restart anchor
+
+        # resume if checkpoints exist
+        if self.ckpt.latest_step() is not None:
+            step, state = self._restore(state)
+
+        while step < n_steps:
+            try:
+                batch = next(self.data)
+                if self.injector is not None:
+                    self.injector.check(step)
+                state, metrics = self.step_fn(state, batch)
+                if self.nan_is_failure:
+                    loss = metrics.get("loss")
+                    if loss is not None and not bool(np.isfinite(jax.device_get(loss))):
+                        raise StepFailure(f"non-finite loss at step {step}")
+                history.append({"step": step,
+                                **{k: float(jax.device_get(v))
+                                   for k, v in metrics.items()}})
+                if self.log_every and step % self.log_every == 0:
+                    print(f"[step {step}] " + " ".join(
+                        f"{k}={v:.4f}" for k, v in history[-1].items() if k != "step"),
+                        flush=True)
+                step += 1
+                if step % self.checkpoint_every == 0:
+                    self._save(step, state)
+            except StepFailure as e:
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise RuntimeError(f"exceeded max_restarts={self.max_restarts}") from e
+                print(f"[supervisor] {e} -> restoring latest checkpoint "
+                      f"(restart {restarts}/{self.max_restarts})", flush=True)
+                step, state = self._restore(state)
+
+        self._save(step, state)
+        self.ckpt.wait()
+        return {"state": state, "history": history, "restarts": restarts,
+                "final_step": step}
+
+    # ------------------------------------------------------------------
+    def _save(self, step: int, state: dict) -> None:
+        payload = {k: v for k, v in state.items() if k != "extra"}
+        payload["extra"] = {"data": self.data.state_dict()}
+        self.ckpt.save(step, payload)
+
+    def _restore(self, template_state: dict) -> tuple[int, dict]:
+        self.ckpt.wait()
+        if self.ckpt.latest_step() is None:
+            # failed before the first checkpoint: cold restart from init
+            self.data.load_state_dict(self._data_state0)
+            return 0, self.init_state
+        templates = {k: v for k, v in template_state.items() if k != "extra"}
+        step, restored = self.ckpt.restore(None, templates, self.state_shardings)
+        self.data.load_state_dict(restored["extra"]["data"])
+        state = {k: restored[k] for k in templates}
+        return step, state

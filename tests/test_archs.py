@@ -1,0 +1,104 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on CPU,
+output shapes + finiteness; decode-vs-train equivalence for decoder archs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.nn import transformer as T
+
+LM_ARCHS = [a for a in configs.ARCH_MODULES if a != "resnet18_fsl"]
+
+
+def batch_for(cfg, B, S, key):
+    ks = jax.random.split(key, 3)
+    b = {}
+    if cfg.family == "audio":
+        b["embeds"] = jax.random.normal(ks[0], (B, S, cfg.d_frontend))
+    else:
+        b["tokens"] = jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)
+    if cfg.family == "vlm":
+        b["vision"] = jax.random.normal(ks[1], (B, cfg.n_image_tokens, cfg.d_vision))
+    b["labels"] = jax.random.randint(ks[2], (B, S), 0, cfg.vocab_size)
+    return b
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_forward_and_loss(arch):
+    cfg = configs.get_reduced(arch)
+    params = T.init(jax.random.key(0), cfg)
+    B, S = 2, 16
+    batch = batch_for(cfg, B, S, jax.random.key(1))
+    out = T.forward(params, cfg, batch, mode="train")
+    assert out["hidden"].shape == (B, S, cfg.d_model)
+    assert out["branches"].shape[1:] == (B, cfg.d_model)
+    assert bool(jnp.isfinite(out["hidden"].astype(jnp.float32)).all())
+    loss, nll = T.lm_loss(params, cfg, batch)
+    assert bool(jnp.isfinite(loss)), float(loss)
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_one_grad_step(arch):
+    cfg = configs.get_reduced(arch)
+    params = T.init(jax.random.key(0), cfg)
+    batch = batch_for(cfg, 2, 8, jax.random.key(1))
+
+    def loss_fn(p):
+        return T.lm_loss(p, cfg, batch)[0]
+
+    l0, grads = jax.value_and_grad(loss_fn)(params)
+    params2 = jax.tree.map(lambda p, g: p - 0.05 * g.astype(p.dtype), params, grads)
+    l1 = loss_fn(params2)
+    assert bool(jnp.isfinite(l0)) and bool(jnp.isfinite(l1))
+    assert float(l1) < float(l0) + 0.5  # a small step must not blow up
+
+
+@pytest.mark.parametrize("arch", [a for a in LM_ARCHS if a not in configs.ENCODER_ONLY])
+def test_decode_matches_train(arch):
+    cfg = configs.get_reduced(arch)
+    if cfg.n_experts:
+        cfg = cfg.replace(capacity_factor=16.0)  # avoid capacity-drop divergence
+    params = T.init(jax.random.key(0), cfg)
+    B, S = 2, 12
+    batch = batch_for(cfg, B, S, jax.random.key(1))
+    h_train = T.forward(params, cfg, batch, mode="train")["hidden"]
+    caches = T.init_cache(cfg, B, S)
+    max_err = 0.0
+    for t in range(S):
+        db = {k: (v[:, t:t + 1] if k in ("tokens",) else v) for k, v in batch.items()}
+        dout = T.forward(params, cfg, db, mode="decode", caches=caches, pos=jnp.asarray(t))
+        caches = dout["caches"]
+        max_err = max(max_err, float(jnp.abs(dout["hidden"][:, 0] - h_train[:, t]).max()))
+    assert max_err < 2e-4, max_err
+
+
+def test_full_configs_match_assignment():
+    spec = {
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102400),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+        "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+        "qwen2-0.5b": (24, 896, 14, 2, 4864, 151936),
+        "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+    }
+    for arch, (L_, d, h, kv, ff, v) in spec.items():
+        c = configs.get_config(arch)
+        got = (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads,
+               c.moe_d_ff if c.family == "moe" else c.d_ff, c.vocab_size)
+        assert got == (L_, d, h, kv, ff, v), (arch, got)
+        # layer layout covers exactly n_layers
+        head, unit, reps, tail = c.layout()
+        assert len(head) + reps * len(unit) + len(tail) == c.n_layers, arch
+
+
+def test_cell_skip_rules():
+    cells = configs.all_cells()
+    assert len(cells) == 40
+    runs = [c for c in cells if c[2]]
+    skips = [c for c in cells if not c[2]]
+    assert len(runs) == 31 and len(skips) == 9
+    assert all(why for *_, why in skips)

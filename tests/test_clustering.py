@@ -1,0 +1,96 @@
+"""Weight clustering (paper §III-A, Figs. 4/5): K-means, reconstruction,
+the paper-faithful accumulate path, storage/op accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.clustering import kmeans, layers as cl
+
+
+def test_kmeans_recovers_discrete_levels():
+    vals = jnp.asarray([0.1] * 10 + [0.5] * 10 + [0.9] * 10)
+    cent, idx = kmeans.kmeans_1d(vals, 4)
+    recon = cent[idx]
+    np.testing.assert_allclose(recon, vals, atol=1e-3)
+
+
+def test_kmeans_error_decreases_with_clusters():
+    vals = jax.random.normal(jax.random.key(0), (512,))
+    errs = []
+    for bits in (1, 2, 4, 6):
+        cent, idx = kmeans.kmeans_1d(vals, 2 ** bits)
+        errs.append(float(jnp.mean((cent[idx] - vals) ** 2)))
+    assert errs == sorted(errs, reverse=True)
+    assert errs[-1] < 1e-2
+
+
+@pytest.mark.parametrize("shape,in_axis,ch_sub", [
+    ((3, 3, 32, 16), 2, 16), ((3, 3, 64, 8), 2, 64), ((128, 96), 0, 32),
+])
+def test_cluster_reconstruct_roundtrip(shape, in_axis, ch_sub):
+    w = jax.random.normal(jax.random.key(1), shape) * 0.1
+    cw = cl.cluster_weight(w, bits=4, ch_sub=ch_sub, in_axis=in_axis)
+    r = cl.reconstruct(cw, jnp.float32)
+    assert r.shape == w.shape
+    # 16 centroids per ch_sub group of a smooth distribution: small error
+    assert float(jnp.mean((r - w) ** 2)) < float(jnp.mean(w ** 2)) * 0.1
+
+
+def test_accumulate_path_equals_decompress():
+    """Fig. 4(b): partial-sum-reuse schedule == dense matmul with the same
+    codebook (numerical identity, different op count)."""
+    w = jax.random.normal(jax.random.key(2), (64, 48)) * 0.2
+    cw = cl.cluster_weight(w, bits=3, ch_sub=16, in_axis=0)
+    x = jax.random.normal(jax.random.key(3), (5, 64))
+    y_acc = cl.clustered_dense_accumulate(cw, x)
+    y_dec = cl.clustered_dense(cw, x)
+    np.testing.assert_allclose(y_acc, y_dec, rtol=1e-4, atol=1e-4)
+
+
+def test_storage_compression_ratio():
+    """Paper Fig. 5: ~1.8x memory saving vs INT8 at ch_sub=64, 4-bit idx."""
+    w = jax.random.normal(jax.random.key(4), (3, 3, 64, 64))
+    cw = cl.cluster_weight(w, bits=4, ch_sub=64, in_axis=2)
+    ratio = cl.dense_storage_bits(w.shape, 8) / cl.storage_bits(cw)
+    assert 1.5 < ratio < 2.0, ratio
+
+
+def test_ops_reduction_fig4b():
+    """2*K^2*ch_sub - 1 -> K^2*ch_sub + N - 1 (per output pixel per group)."""
+    clustered, dense = cl.clustered_ops_per_mac_window(3, 16, 64)
+    assert dense == 2 * 9 * 64 - 1
+    assert clustered == 9 * 64 + 16 - 1
+    assert dense / clustered > 1.9     # the paper's ~2.1x op reduction
+
+
+def test_compression_improves_with_ch_sub():
+    """Fig. 5 trend: larger ch_sub -> more weights share a codebook ->
+    better compression (saturating)."""
+    w = jax.random.normal(jax.random.key(5), (3, 3, 256, 32))
+    ratios = []
+    for ch in (8, 64, 256):
+        cw = cl.cluster_weight(w, bits=4, ch_sub=ch, in_axis=2)
+        ratios.append(cl.dense_storage_bits(w.shape, 8) / cl.storage_bits(cw))
+    assert ratios[0] < ratios[1] <= ratios[2] + 1e-6
+
+
+def test_error_grows_with_ch_sub():
+    """Fig. 5 trend: larger ch_sub -> coarser codebooks -> higher FE error."""
+    w = jax.random.normal(jax.random.key(6), (3, 3, 256, 32)) * 0.1
+    errs = []
+    for ch in (8, 256):
+        cw = cl.cluster_weight(w, bits=4, ch_sub=ch, in_axis=2)
+        errs.append(float(cl.clustered_error(w, cw)))
+    assert errs[0] < errs[1]
+
+
+def test_clustered_conv2d_close_to_dense():
+    from repro.nn import module as nn
+    p = nn.conv2d_init(jax.random.key(7), 3, 16, 8)
+    x = jax.random.normal(jax.random.key(8), (2, 8, 8, 16))
+    y_dense = nn.conv2d_apply(p, x)
+    cw = cl.cluster_weight(p["kernel"], bits=5, ch_sub=16, in_axis=2)
+    y_clu = cl.clustered_conv2d(cw, x)
+    rel = float(jnp.linalg.norm(y_clu - y_dense) / jnp.linalg.norm(y_dense))
+    assert rel < 0.15, rel

@@ -1,0 +1,59 @@
+"""Cost model (paper Eqs. 1/2/6, Table I): FSL-HDnn is the cheapest trainer,
+with the op-count ratios the paper reports (~21x vs FT)."""
+import pytest
+
+from repro.core import complexity as cx
+
+
+def _costs(**kw):
+    # ResNet-18-ish: ~1.8 GFLOP fwd, 11M params, 50 samples (10-way 5-shot)
+    base = dict(fwd_flops=1.8e9, params=11e6, n_samples=50)
+    base.update(kw)
+    return cx.task_costs(**base)
+
+
+def test_ordering_matches_fig3b():
+    c = _costs()
+    assert c["fsl_hdnn"].total < c["knn"].total
+    assert c["knn"].total < c["partial_ft"].total
+    # partial < full holds per-iteration (Fig. 3b); at the paper's protocol
+    # (15 partial epochs vs 5 full epochs) the TOTALS cross — compare at
+    # equal iteration count:
+    c_eq = _costs(t_itr_partial=5)
+    assert c_eq["partial_ft"].total < c_eq["full_ft"].total
+
+
+def test_fsl_vs_ft_ratio_about_21x():
+    """Paper §VI-C: 21x fewer computing ops than FT-based methods."""
+    s = cx.speedup_table(_costs())
+    assert 10 < s["full_ft"] < 40, s
+    assert s["fsl_hdnn"] == 1.0
+
+
+def test_no_iteration_term():
+    """Eq. 6 has no T_itr: doubling epochs changes FT cost, not FSL-HDnn."""
+    a = _costs(t_itr_full=5)["fsl_hdnn"].total
+    b = _costs(t_itr_full=50)["fsl_hdnn"].total
+    assert a == b
+    fa = _costs(t_itr_full=5)["full_ft"].total
+    fb = _costs(t_itr_full=50)["full_ft"].total
+    assert abs(fb / fa - 10) < 0.01
+
+
+def test_no_gradient_terms():
+    c = _costs()["fsl_hdnn"]
+    assert c.gc == 0 and c.bp == 0 and c.wu == 0
+
+
+def test_batched_training_reduces_encodes():
+    """§V-B: batched single-pass encodes once per class, not per sample."""
+    per_sample = cx.hdc_train_ops(512, 4096, 50, batched_classes=0)
+    per_class = cx.hdc_train_ops(512, 4096, 50, batched_classes=10)
+    assert per_class < per_sample
+    assert per_sample / per_class == pytest.approx(5.0, rel=0.01)
+
+
+def test_clustered_fe_speedup_applied():
+    fast = _costs(clustered_speedup=2.1)["fsl_hdnn"]
+    slow = _costs(clustered_speedup=1.0)["fsl_hdnn"]
+    assert fast.fp < slow.fp

@@ -1,0 +1,68 @@
+"""Data pipeline: determinism, checkpointable state, prefetch stalls."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.data import (EpisodicSampler, PrefetchIterator, SyntheticLMStream,
+                        synthetic_feature_pool)
+
+
+def test_stream_deterministic_and_seekable():
+    s1 = SyntheticLMStream(1000, 4, 16, seed=3)
+    batches = [next(s1) for _ in range(5)]
+    s2 = SyntheticLMStream(1000, 4, 16, seed=3)
+    s2.load_state_dict({"step": 3, "seed": 3})
+    b3 = next(s2)
+    np.testing.assert_array_equal(b3["tokens"], batches[3]["tokens"])
+
+
+def test_stream_is_learnable_structure():
+    """Bigram bias means labels are predictable from tokens (loss can fall)."""
+    s = SyntheticLMStream(50, 8, 64, seed=0, bigram_bias=1.0)
+    b = next(s)
+    succ = s._succ
+    pred = succ[b["tokens"][:, :]]
+    agree = (pred == b["labels"]).mean()
+    assert agree == 1.0
+
+
+def test_stream_labels_shifted_tokens():
+    s = SyntheticLMStream(100, 2, 32, seed=1)
+    b = next(s)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_episodic_sampler_balance_and_state():
+    feats, labels = synthetic_feature_pool(0, n_classes=12, per_class=25, dim=16)
+    samp = EpisodicSampler(feats, labels, n_way=6, k_shot=4, n_query=5, seed=2)
+    ep1 = next(samp)
+    assert ep1["support_x"].shape == (24, 16)
+    assert (np.bincount(ep1["support_y"]) == 4).all()
+    samp2 = EpisodicSampler(feats, labels, n_way=6, k_shot=4, n_query=5, seed=2)
+    ep1b = next(samp2)
+    np.testing.assert_array_equal(ep1["support_x"], ep1b["support_x"])
+
+
+def test_prefetch_serves_in_order():
+    src = iter(range(20))
+    pf = PrefetchIterator(src, depth=3, straggler_timeout_s=5)
+    got = list(pf)
+    assert got == list(range(20))
+    assert pf.stats()["stalls"] == 0
+
+
+def test_prefetch_straggler_reuse():
+    def slow_gen():
+        yield 1
+        yield 2
+        time.sleep(1.0)            # straggler
+        yield 3
+
+    pf = PrefetchIterator(slow_gen(), depth=1, straggler_timeout_s=0.1,
+                          policy="reuse")
+    out = [next(pf) for _ in range(4)]
+    assert out[0] == 1 and out[1] == 2
+    assert 2 in out[2:] or 3 in out[2:]   # reused batch served during stall
+    assert pf.stats()["stalls"] >= 1
+    assert pf.stats()["reused"] >= 1

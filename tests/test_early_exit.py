@@ -1,0 +1,101 @@
+"""Early exit (paper §V-A, Figs. 11/17): the (E_s, E_c) consistency rule,
+vectorized study path, and the genuinely-skipping while_loop serving path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import early_exit as ee
+from repro.core.hdc import classifier as hdc
+
+
+def test_exit_points_rule():
+    # R=4 branches, B=3 samples
+    preds = jnp.asarray([
+        [1, 0, 2],
+        [1, 0, 1],
+        [1, 1, 1],
+        [1, 1, 1],
+    ])
+    # E_s=2, E_c=2: need 2 consecutive equal preds, exit no earlier than branch 2
+    ex = ee.exit_points(preds, ee.EEConfig(e_start=2, e_consecutive=2))
+    # sample0: preds all 1 -> agree at branch1 (0-based idx 1 >= E_s-1=1) -> 1
+    # sample1: 0,0 agree at idx1; >= idx1 -> 1
+    # sample2: 2,1,1,1 -> first agree pair at idx2 -> 2
+    assert ex.tolist() == [1, 1, 2]
+
+
+def test_exit_points_never_confident():
+    preds = jnp.asarray([[0], [1], [2], [3]])
+    ex = ee.exit_points(preds, ee.EEConfig(2, 2))
+    assert ex.tolist() == [3]          # runs to the last branch
+
+
+def test_stricter_config_exits_later():
+    """Fig. 17 trend: larger E_s / E_c => deeper average exit."""
+    key = jax.random.key(0)
+    preds = jax.random.randint(key, (8, 64), 0, 2)  # noisy 2-class predictions
+    depth = {}
+    for es, ec in [(1, 2), (2, 2), (2, 3), (4, 3)]:
+        depth[(es, ec)] = float(ee.exit_points(preds, ee.EEConfig(es, ec)).mean())
+    assert depth[(1, 2)] <= depth[(2, 2)] <= depth[(2, 3)] <= depth[(4, 3)]
+
+
+def _branch_setup(key, R=4, n_classes=4, per=8, dim=32, sep=6.0):
+    """Per-branch features that get progressively more separable (like a CNN)."""
+    ks = jax.random.split(key, R + 1)
+    centers = jax.random.normal(ks[-1], (n_classes, dim))
+    centers = centers / jnp.linalg.norm(centers, axis=-1, keepdims=True) * sep
+    labels = jnp.repeat(jnp.arange(n_classes), per)
+    feats = []
+    for r in range(R):
+        noise = jax.random.normal(ks[r], (n_classes * per, dim))
+        strength = 0.3 + 0.7 * (r + 1) / R      # deeper = cleaner feature
+        feats.append(strength * jnp.repeat(centers, per, 0) + noise)
+    return feats, labels
+
+
+def test_ee_predict_accuracy_and_savings():
+    cfg = hdc.HDCConfig(dim=2048)
+    feats, labels = _branch_setup(jax.random.key(1))
+    hvs = ee.train_branch_hvs(cfg, feats, labels, 4)
+    preds, ex = ee.ee_predict(cfg, hvs, feats, ee.EEConfig(2, 2))
+    acc = float((preds == labels).mean())
+    assert acc > 0.8, acc
+    assert float(ex.mean()) < 3.0      # exits before the last branch on average
+
+
+def test_serve_while_matches_full_depth_when_strict():
+    """With E_c > R the rule never fires -> while path runs all groups and
+    prediction equals the last branch's prediction."""
+    cfg = hdc.HDCConfig(dim=512)
+    feats, labels = _branch_setup(jax.random.key(2), R=3)
+    hvs = ee.train_branch_hvs(cfg, feats, labels, 4)
+    hvs_arr = jnp.stack(hvs)
+
+    x0 = jnp.stack(feats, 0)           # (R, B, F): apply_group returns branch r
+
+    def apply_group(i, x):
+        return x, jnp.take(x0, i, axis=0)[:1]   # serve one sample (B=1)
+
+    pred, n_run, _ = ee.serve_while(apply_group, 3, x0[0][:1], cfg, hvs_arr,
+                                    ee.EEConfig(e_start=1, e_consecutive=5))
+    assert int(n_run) == 3
+    want, _ = hdc.predict(cfg, hvs[-1], feats[-1][:1])
+    assert int(pred[0]) == int(want[0])
+
+
+def test_serve_while_exits_early_when_confident():
+    cfg = hdc.HDCConfig(dim=2048)
+    feats, labels = _branch_setup(jax.random.key(3), R=4, sep=10.0)
+    hvs = ee.train_branch_hvs(cfg, feats, labels, 4)
+    hvs_arr = jnp.stack(hvs)
+    x0 = jnp.stack(feats, 0)
+
+    def apply_group(i, x):
+        return x, jnp.take(x0, i, axis=0)[:1]
+
+    pred, n_run, _ = ee.serve_while(apply_group, 4, x0[0][:1], cfg, hvs_arr,
+                                    ee.EEConfig(e_start=2, e_consecutive=2))
+    assert int(n_run) < 4              # genuinely skipped compute
+    assert int(pred[0]) == int(labels[0])

@@ -1,0 +1,163 @@
+"""HDC core: encoders (RP/cRP hash/cRP lfsr), single-pass training,
+distance inference, INT precision — paper §II-B, §III-B, §IV-B."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hdc import classifier as hdc
+from repro.core.hdc import encoding, lfsr
+
+
+# ---------------------------------------------------------------------------
+# generators
+# ---------------------------------------------------------------------------
+
+def test_crp_matrix_is_pm1():
+    for impl in ("hash", "lfsr"):
+        B = encoding.crp_matrix(5, 64, 48, impl=impl)
+        assert B.shape == (64, 48)
+        assert bool(jnp.all(jnp.abs(B) == 1.0))
+
+
+def test_crp_matrix_balanced():
+    """±1 entries should be ~balanced (pseudo-random projection)."""
+    for impl in ("hash", "lfsr"):
+        B = encoding.crp_matrix(1, 256, 256, impl=impl)
+        assert abs(float(B.mean())) < 0.05, impl
+
+
+def test_lfsr_is_deterministic_and_seed_sensitive():
+    a = lfsr.generate_blocks(1, 8)
+    b = lfsr.generate_blocks(1, 8)
+    c = lfsr.generate_blocks(2, 8)
+    assert bool(jnp.all(a == b))
+    assert not bool(jnp.all(a == c))
+
+
+def test_lfsr_maximal_period():
+    """taps 0xB400 give a maximal-length 16-bit LFSR: period 2^16 - 1."""
+    s0 = jnp.uint16(0xACE1)
+    s = s0
+    for i in range(1, 70000):
+        s = lfsr.lfsr_step(s)
+        if bool(s == s0):
+            assert i == 2 ** 16 - 1
+            return
+    raise AssertionError("no period found")
+
+
+def test_streaming_crp_equals_materialized():
+    x = jax.random.normal(jax.random.key(0), (3, 70))
+    for impl in ("hash", "lfsr"):
+        h1 = encoding.crp_encode(x, 9, 96, impl=impl)
+        B = encoding.crp_matrix(9, 96, 70, impl=impl)
+        np.testing.assert_allclose(h1, x @ B.T, rtol=1e-5, atol=1e-4)
+
+
+def test_crp_distance_preservation():
+    """JL property: cRP encoding approximately preserves relative distances
+    (the reason cRP can replace RP at equal accuracy, paper Fig. 10)."""
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (20, 256))
+    h = encoding.crp_encode(x, 3, 4096) / np.sqrt(4096)
+    dx = np.linalg.norm(np.asarray(x)[:, None] - np.asarray(x)[None], axis=-1)
+    dh = np.linalg.norm(np.asarray(h)[:, None] - np.asarray(h)[None], axis=-1)
+    iu = np.triu_indices(20, 1)
+    ratio = dh[iu] / dx[iu]
+    assert 0.8 < ratio.mean() < 1.2 and ratio.std() < 0.2
+
+
+def test_encoder_storage_bytes():
+    # paper: 256KB for F=512, D=4096 at 1 bit/elem; cRP = one 16x16 block
+    assert encoding.encoder_storage_bytes(4096, 512, "rp") == 4096 * 512 // 8
+    assert encoding.encoder_storage_bytes(4096, 512, "crp") == 32
+    ratio = encoding.encoder_storage_bytes(4096, 512, "rp") / \
+        encoding.encoder_storage_bytes(4096, 512, "crp")
+    assert ratio == 8192  # within the paper's 512-4096x (per-seed accounting differs)
+
+
+# ---------------------------------------------------------------------------
+# training / inference
+# ---------------------------------------------------------------------------
+
+def _pool(key, n_classes=6, per=12, dim=64, sep=4.0):
+    kc, kn = jax.random.split(key)
+    centers = jax.random.normal(kc, (n_classes, dim)) * sep / np.sqrt(dim) * np.sqrt(dim)
+    centers = centers / jnp.linalg.norm(centers, axis=1, keepdims=True) * sep
+    feats = jnp.repeat(centers, per, 0) + jax.random.normal(kn, (n_classes * per, dim))
+    labels = jnp.repeat(jnp.arange(n_classes), per)
+    return feats, labels
+
+
+@pytest.mark.parametrize("impl", ["hash", "lfsr", "rp"])
+def test_single_pass_training_classifies(impl):
+    cfg = hdc.HDCConfig(dim=2048, impl=impl)
+    feats, labels = _pool(jax.random.key(0))
+    chv = hdc.train_single_pass(cfg, feats, labels, 6)
+    preds, _ = hdc.predict(cfg, chv, feats)
+    acc = float((preds == labels).mean())
+    assert acc > 0.9, (impl, acc)
+
+
+def test_train_is_single_pass_aggregation():
+    """Eq. 4: class HV == sum of that class's sample HVs, exactly."""
+    cfg = hdc.HDCConfig(dim=256, binarize=True)
+    feats, labels = _pool(jax.random.key(1), n_classes=3, per=4)
+    chv = hdc.train_single_pass(cfg, feats, labels, 3)
+    h = hdc.encode(cfg, feats)
+    for j in range(3):
+        np.testing.assert_allclose(chv[j], h[labels == j].sum(0), atol=1e-5)
+
+
+def test_incremental_equals_oneshot():
+    """Online ODL: training in two chunks == training once (continual setup)."""
+    cfg = hdc.HDCConfig(dim=512)
+    feats, labels = _pool(jax.random.key(2))
+    full = hdc.train_single_pass(cfg, feats, labels, 6)
+    part = hdc.train_single_pass(cfg, feats[:30], labels[:30], 6)
+    part = hdc.train_single_pass(cfg, feats[30:], labels[30:], 6, part)
+    np.testing.assert_allclose(full, part, atol=1e-5)
+
+
+def test_batched_training_matches_accuracy():
+    """§V-B batched single-pass: accuracy parity with per-sample training."""
+    feats, labels = _pool(jax.random.key(3), sep=5.0)
+    cfg = hdc.HDCConfig(dim=2048)
+    a = hdc.train_single_pass(cfg, feats, labels, 6)
+    b = hdc.train_batched(cfg, feats, labels, 6)
+    pa, _ = hdc.predict(cfg, a, feats)
+    pb, _ = hdc.predict(cfg, b, feats)
+    assert float((pa == labels).mean()) >= 0.9
+    assert float((pb == labels).mean()) >= 0.9
+
+
+@pytest.mark.parametrize("bits", [1, 4, 8, 16])
+def test_hv_precision_clipping(bits):
+    cfg = hdc.HDCConfig(dim=128, hv_bits=bits)
+    feats, labels = _pool(jax.random.key(4), n_classes=2, per=20)
+    chv = hdc.train_single_pass(cfg, feats, labels, 2)
+    lim = 2 ** (bits - 1) - 1 if bits > 1 else 1
+    assert float(jnp.abs(chv).max()) <= lim
+
+
+@pytest.mark.parametrize("distance", ["l1", "dot", "cos"])
+def test_distances_modes(distance):
+    cfg = hdc.HDCConfig(dim=1024, distance=distance)
+    feats, labels = _pool(jax.random.key(5), sep=5.0)
+    chv = hdc.train_single_pass(cfg, feats, labels, 6)
+    preds, d = hdc.predict(cfg, chv, feats)
+    assert d.shape == (feats.shape[0], 6)
+    assert float((preds == labels).mean()) > 0.85
+
+
+def test_higher_dim_helps_on_hard_pool():
+    """HDC accuracy grows with D (the paper's D=1024..8192 range)."""
+    feats, labels = _pool(jax.random.key(6), sep=1.8, per=20)
+    accs = []
+    for D in (64, 4096):
+        cfg = hdc.HDCConfig(dim=D)
+        chv = hdc.train_single_pass(cfg, feats[::2], labels[::2], 6)
+        preds, _ = hdc.predict(cfg, chv, feats[1::2])
+        accs.append(float((preds == labels[1::2]).mean()))
+    assert accs[1] >= accs[0]

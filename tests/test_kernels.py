@@ -1,0 +1,111 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.core.hdc import encoding
+
+
+# ---------------------------------------------------------------------------
+# cRP encode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,F,D", [
+    (1, 16, 64), (3, 100, 256), (8, 512, 1024), (5, 130, 200),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_crp_encode_matches_ref(B, F, D, dtype):
+    x = jax.random.normal(jax.random.key(B * F), (B, F)).astype(dtype)
+    got = ops.crp_encode(x, seed=7, D=D)
+    want = ref.crp_encode_ref(x, seed=7, D=D)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-2)
+
+
+def test_crp_encode_block_shape_sweep():
+    x = jax.random.normal(jax.random.key(0), (4, 192))
+    want = ref.crp_encode_ref(x, seed=3, D=320)
+    for bD, bF in [(32, 32), (64, 128), (128, 64)]:
+        got = ops.crp_encode(x, seed=3, D=320, bD=bD, bF=bF)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_crp_kernel_matches_streaming_encoder():
+    """Kernel == core.hdc.encoding.crp_encode (hash impl) == materialized."""
+    x = jax.random.normal(jax.random.key(1), (2, 64))
+    a = ops.crp_encode(x, seed=11, D=128)
+    b = encoding.crp_encode(x, 11, 128, impl="hash")
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# clustered matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,K,N,ch_sub,bits", [
+    (4, 64, 96, 16, 2), (8, 128, 128, 64, 4), (2, 256, 64, 128, 3),
+    (16, 128, 200, 32, 4),
+])
+def test_clustered_matmul_matches_ref(M, K, N, ch_sub, bits):
+    key = jax.random.key(M * K + N)
+    x = jax.random.normal(key, (M, K))
+    idx = jax.random.randint(jax.random.key(1), (K, N), 0, 2 ** bits).astype(jnp.int8)
+    cb = jax.random.normal(jax.random.key(2), (K // ch_sub, 2 ** bits))
+    got = ops.clustered_matmul(x, idx, cb, ch_sub=ch_sub)
+    want = ref.clustered_matmul_ref(x, idx, cb, ch_sub=ch_sub)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_clustered_matmul_small_block_inside_group():
+    # bK < ch_sub: K-tiles sit inside one codebook group
+    M, K, N, ch_sub = 4, 256, 64, 256
+    x = jax.random.normal(jax.random.key(0), (M, K))
+    idx = jax.random.randint(jax.random.key(1), (K, N), 0, 16).astype(jnp.int8)
+    cb = jax.random.normal(jax.random.key(2), (1, 16))
+    got = ops.clustered_matmul(x, idx, cb, ch_sub=ch_sub, bK=128)
+    want = ref.clustered_matmul_ref(x, idx, cb, ch_sub=ch_sub)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_clustered_matmul_bf16_activations():
+    M, K, N, ch_sub = 8, 128, 128, 64
+    x = jax.random.normal(jax.random.key(0), (M, K)).astype(jnp.bfloat16)
+    idx = jax.random.randint(jax.random.key(1), (K, N), 0, 16).astype(jnp.int8)
+    cb = jax.random.normal(jax.random.key(2), (K // ch_sub, 16)).astype(jnp.bfloat16)
+    got = ops.clustered_matmul(x, idx, cb, ch_sub=ch_sub)
+    want = ref.clustered_matmul_ref(x, idx, cb, ch_sub=ch_sub)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-1)
+
+
+# ---------------------------------------------------------------------------
+# HDC distance
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,C,D", [(1, 2, 64), (4, 10, 512), (8, 33, 1000),
+                                   (3, 128, 4096)])
+@pytest.mark.parametrize("mode", ["l1", "dot"])
+def test_hdc_distance_matches_ref(B, C, D, mode):
+    q = jax.random.normal(jax.random.key(0), (B, D))
+    c = jax.random.normal(jax.random.key(1), (C, D))
+    got = ops.hdc_distance(q, c, mode=mode)
+    want = ref.hdc_distance_ref(q, c, mode=mode)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+
+def test_hdc_distance_int_hvs():
+    """Chip stores INT1-16 class HVs; kernel must handle integer inputs."""
+    q = jnp.sign(jax.random.normal(jax.random.key(0), (4, 256)))
+    c = jax.random.randint(jax.random.key(1), (8, 256), -127, 127).astype(jnp.int32)
+    got = ops.hdc_distance(q, c, mode="l1")
+    want = ref.hdc_distance_ref(q, c, mode="l1")
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-2)
+
+
+def test_hdc_distance_argmin_agrees():
+    q = jax.random.normal(jax.random.key(2), (6, 512))
+    c = jax.random.normal(jax.random.key(3), (12, 512))
+    for mode in ("l1", "dot"):
+        got = jnp.argmin(ops.hdc_distance(q, c, mode=mode), -1)
+        want = jnp.argmin(ref.hdc_distance_ref(q, c, mode=mode), -1)
+        assert (got == want).all()

@@ -1,0 +1,28 @@
+"""Pipeline-parallelism unit tests (single-device parts; the multi-device
+GPipe equivalence test is tests/test_distributed.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import pipeline as pp
+
+
+def test_stage_params_split():
+    ws = jnp.arange(24.0).reshape(8, 3)
+    st = pp.stage_params({"w": ws}, 4)
+    assert st["w"].shape == (4, 2, 3)
+    np.testing.assert_array_equal(st["w"][0], ws[:2])
+    np.testing.assert_array_equal(st["w"][3], ws[6:])
+
+
+def test_stage_params_requires_divisibility():
+    with pytest.raises(AssertionError):
+        pp.stage_params({"w": jnp.zeros((7, 3))}, 4)
+
+
+def test_bubble_fraction():
+    assert pp.bubble_fraction(1, 8) == 0.0
+    assert pp.bubble_fraction(4, 4) == pytest.approx(3 / 7)
+    # more microbatches amortize the bubble
+    assert pp.bubble_fraction(4, 32) < pp.bubble_fraction(4, 8)

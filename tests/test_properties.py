@@ -1,0 +1,106 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import early_exit as ee
+from repro.core.clustering import layers as cl
+from repro.core.hdc import classifier as hdc
+from repro.core.hdc import encoding
+from repro.kernels import ops, ref
+
+S = settings(max_examples=20, deadline=None)
+
+
+@S
+@given(st.integers(1, 6), st.integers(8, 80), st.integers(8, 100),
+       st.integers(0, 2 ** 31 - 1))
+def test_crp_encode_linearity(B, F, D, seed):
+    """Encoding is linear: Encode(a·x) == a·Encode(x) (it's a matmul with a
+    generated matrix — the cyclic generation must not depend on x)."""
+    x = jax.random.normal(jax.random.key(seed % 1000), (B, F))
+    h1 = encoding.crp_encode(2.5 * x, seed, D)
+    h2 = 2.5 * encoding.crp_encode(x, seed, D)
+    np.testing.assert_allclose(h1, h2, rtol=1e-4, atol=1e-3)
+
+
+@S
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 64), st.integers(1, 64))
+def test_hash_block_deterministic_pm1(seed, bi, bj):
+    b1 = encoding.hash_block(seed, bi, bj)
+    b2 = encoding.hash_block(seed, bi, bj)
+    assert bool(jnp.all(b1 == b2))
+    assert bool(jnp.all(jnp.abs(b1) == 1.0))
+
+
+@S
+@given(st.integers(2, 5), st.integers(2, 8), st.integers(16, 128))
+def test_train_permutation_invariance(n_classes, per, D):
+    """Single-pass HDC training is order-invariant (sum aggregation)."""
+    n = n_classes * per
+    feats = jax.random.normal(jax.random.key(n), (n, 24))
+    labels = jnp.repeat(jnp.arange(n_classes), per)
+    perm = jax.random.permutation(jax.random.key(1), n)
+    cfg = hdc.HDCConfig(dim=D)
+    a = hdc.train_single_pass(cfg, feats, labels, n_classes)
+    b = hdc.train_single_pass(cfg, feats[perm], labels[perm], n_classes)
+    np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+@S
+@given(st.integers(1, 4), st.integers(1, 4))
+def test_exit_points_bounds(es, ec):
+    preds = jax.random.randint(jax.random.key(es * 7 + ec), (6, 16), 0, 3)
+    ex = ee.exit_points(preds, ee.EEConfig(es, ec))
+    assert bool(jnp.all(ex >= 0)) and bool(jnp.all(ex <= 5))
+    # exits can never fire before max(E_s-1, E_c-1)
+    lo = min(max(es - 1, ec - 1), 5)
+    assert bool(jnp.all((ex >= lo) | (ex == 5)))
+
+
+@S
+@given(st.integers(1, 8), st.sampled_from([16, 32, 64]),
+       st.sampled_from([2, 3, 4]), st.sampled_from([8, 16, 32]))
+def test_clustered_matmul_property(M, K, bits, ch_sub):
+    if K % ch_sub:
+        return
+    x = jax.random.normal(jax.random.key(M), (M, K))
+    idx = jax.random.randint(jax.random.key(1), (K, 24), 0, 2 ** bits).astype(jnp.int8)
+    cb = jax.random.normal(jax.random.key(2), (K // ch_sub, 2 ** bits))
+    got = ops.clustered_matmul(x, idx, cb, ch_sub=ch_sub)
+    want = ref.clustered_matmul_ref(x, idx, cb, ch_sub=ch_sub)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@S
+@given(st.integers(1, 5), st.integers(1, 12), st.sampled_from([32, 100, 256]))
+def test_hdc_distance_triangle_and_self(B, C, D):
+    """L1 distance: d(x,x)=0 after identical normalization; argmin picks the
+    class whose (normalized) HV is nearest."""
+    q = jax.random.normal(jax.random.key(B * C), (B, D))
+    d = ref.hdc_distance_ref(q, q, mode="l1")
+    assert bool(jnp.all(jnp.diagonal(d) < 1e-4))
+    got = ops.hdc_distance(q, q, mode="l1")
+    np.testing.assert_allclose(got, d, rtol=1e-4, atol=1e-2)
+
+
+@S
+@given(st.integers(2, 64), st.integers(1, 7))
+def test_quantize_hv_range(D, bits):
+    cfg = hdc.HDCConfig(dim=D, hv_bits=bits)
+    x = jax.random.normal(jax.random.key(D), (100, D)) * 100
+    q = hdc.quantize_class_hvs(cfg, x)
+    lim = 2 ** (bits - 1) - 1 if bits > 1 else 1
+    assert float(jnp.abs(q).max()) <= lim + 1e-6
+
+
+@S
+@given(st.integers(0, 10_000))
+def test_lfsr_never_zero(seed):
+    s = jax.device_get(jnp.asarray(0xACE1 + seed % 1000, jnp.uint16))
+    s = jnp.maximum(s, 1).astype(jnp.uint16)
+    from repro.core.hdc import lfsr
+    for _ in range(32):
+        s = lfsr.lfsr_step(s)
+        assert int(s) != 0
